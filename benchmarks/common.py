@@ -1,0 +1,58 @@
+"""Shared benchmark machinery: the paper's experiment grid (Table 1)."""
+
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.apps import mandelbrot, psia
+from repro.core import dls, faults, simulator
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+P = 256                        # miniHPC: 16 nodes x 16 ranks
+NODE_SIZE = 16
+
+# paper technique set (Table 1)
+TECHNIQUES = list(dls.ALL_TECHNIQUES)
+
+
+def apps(quick: bool = True):
+    """(name, task_times) for the paper's two applications.
+
+    quick mode groups Mandelbrot pixels 16-per-task (N=16,384) to keep the
+    SS event count tractable; durations (and their variance structure) are
+    preserved because grouping sums the real per-pixel times.
+    """
+    n_mandel = 16_384 if quick else mandelbrot.PAPER_N
+    return [
+        ("psia", psia.task_times(psia.PAPER_N)),
+        ("mandelbrot", mandelbrot.task_times(n_mandel)),
+    ]
+
+
+def scenarios(t_estimate: float, seed: int = 0):
+    """The seven Table-1 execution scenarios at P=256."""
+    sc = faults.paper_scenarios(P, t_exec_estimate=t_estimate, seed=seed)
+    return sc
+
+
+def run_one(task_times, technique: str, scenario, *, rdlb: bool,
+            seed: int = 0):
+    t0 = time.time()
+    r = simulator.run(task_times, technique, scenario, rdlb_enabled=rdlb,
+                      seed=seed)
+    return r, time.time() - t0
+
+
+def write_csv(name: str, header, rows):
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    path = ARTIFACTS / f"{name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path

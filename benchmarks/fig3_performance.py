@@ -1,0 +1,93 @@
+"""Fig. 3 reproduction: parallel loop time of PSIA and Mandelbrot for all
+13 DLS techniques +- rDLB under the Table-1 scenarios at P=256.
+
+Output: artifacts/bench/fig3_<app>.csv with
+    technique, scenario, rdlb, t_par, n_duplicates, wasted_tasks
+(t_par = inf marks the paper's "waits indefinitely" hang.)
+
+STATIC is excluded from rDLB runs, as in the paper (it does not
+self-schedule).  Failure scenarios only run WITH rDLB (without, the
+execution hangs — asserted once per app as fig1b).
+"""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks import common
+
+
+def run(quick: bool = True, reps: int = 3):
+    all_rows = {}
+    for app_name, tt in common.apps(quick):
+        rows = []
+        base_time = {}
+        for tech in common.TECHNIQUES:
+            sc = common.scenarios(1.0)["baseline"]
+            r, _ = common.run_one(tt, tech, sc, rdlb=True)
+            base_time[tech] = r.t_par
+            rows.append((tech, "baseline", 1, r.t_par, r.n_duplicates,
+                         r.wasted_tasks))
+        t_est = base_time["FAC"]
+
+        # one hang demonstration (fig 1b) per app
+        sc = common.scenarios(t_est)["fail_1"]
+        r, _ = common.run_one(tt, "FAC", sc, rdlb=False)
+        rows.append(("FAC", "fail_1", 0, r.t_par, r.n_duplicates,
+                     r.wasted_tasks))
+        assert math.isinf(r.t_par)
+
+        for tech in common.TECHNIQUES:
+            if tech == "STATIC":
+                continue                      # paper: no rDLB for STATIC
+            for scen in ("fail_1", "fail_half", "fail_pm1"):
+                ts = []
+                for rep in range(reps):
+                    sc = common.scenarios(t_est, seed=rep)[scen]
+                    r, _ = common.run_one(tt, tech, sc, rdlb=True,
+                                          seed=rep)
+                    assert not r.hang, (app_name, tech, scen)
+                    ts.append((r.t_par, r.n_duplicates, r.wasted_tasks))
+                t = sum(x[0] for x in ts) / len(ts)
+                rows.append((tech, scen, 1, t,
+                             sum(x[1] for x in ts) / len(ts),
+                             sum(x[2] for x in ts) / len(ts)))
+        for tech in common.TECHNIQUES:
+            for scen in ("pe_perturb", "latency_perturb",
+                         "combined_perturb"):
+                sc = common.scenarios(t_est)[scen]
+                for rdlb in ((0,) if tech == "STATIC" else (0, 1)):
+                    r, _ = common.run_one(tt, tech, sc, rdlb=bool(rdlb))
+                    rows.append((tech, scen, rdlb, r.t_par,
+                                 r.n_duplicates, r.wasted_tasks))
+        common.write_csv(f"fig3_{app_name}",
+                         ["technique", "scenario", "rdlb", "t_par",
+                          "n_duplicates", "wasted_tasks"], rows)
+        all_rows[app_name] = rows
+    return all_rows
+
+
+def main(quick: bool = True):
+    all_rows = run(quick)
+    out = []
+    for app, rows in all_rows.items():
+        by = {(t, s, r): tp for t, s, r, tp, _, _ in rows}
+        base = by[("FAC", "baseline", 1)]
+        f1 = by[("FAC", "fail_1", 1)]
+        pm1 = by[("FAC", "fail_pm1", 1)]
+        sp = {}
+        for tech in ("FAC", "AWF-B"):
+            wo = by[(tech, "combined_perturb", 0)]
+            wi = by[(tech, "combined_perturb", 1)]
+            sp[tech] = wo / wi
+        out.append(f"fig3,{app},baseline_FAC_s,{base:.2f}")
+        out.append(f"fig3,{app},fail1_over_base,{f1/base:.2f}")
+        out.append(f"fig3,{app},failPm1_over_base,{pm1/base:.2f}")
+        out.append(f"fig3,{app},combined_speedup_FAC,{sp['FAC']:.2f}")
+        out.append(f"fig3,{app},combined_speedup_AWF-B,{sp['AWF-B']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

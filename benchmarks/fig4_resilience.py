@@ -1,0 +1,62 @@
+"""Fig. 4 reproduction: FePIA resilience of DLS techniques (with rDLB)
+under 1, P/2 and P-1 failures, relative to the most robust technique.
+
+Reads fig3 CSVs (runs fig3 if missing); writes fig4_<app>.csv:
+    scenario, technique, rho_res   (1.0 = most robust, lower is better)
+"""
+
+from __future__ import annotations
+
+import csv
+from pathlib import Path
+
+from benchmarks import common
+from repro.core import robustness
+
+
+def load_fig3(app: str):
+    path = common.ARTIFACTS / f"fig3_{app}.csv"
+    if not path.exists():
+        from benchmarks import fig3_performance
+        fig3_performance.run()
+    rows = list(csv.DictReader(open(path)))
+    return {(r["technique"], r["scenario"], int(r["rdlb"])):
+            float(r["t_par"]) for r in rows}
+
+
+def run():
+    out = {}
+    for app in ("psia", "mandelbrot"):
+        by = load_fig3(app)
+        rows = []
+        for scen in ("fail_1", "fail_half", "fail_pm1"):
+            tb, tf = {}, {}
+            for tech in common.TECHNIQUES:
+                if tech == "STATIC":
+                    continue
+                tb[tech] = by[(tech, "baseline", 1)]
+                tf[tech] = by[(tech, scen, 1)]
+            rho = robustness.resilience(tf, tb)
+            rows += [(scen, t, rho[t]) for t in rho]
+        common.write_csv(f"fig4_{app}", ["scenario", "technique",
+                                         "rho_res"], rows)
+        out[app] = rows
+    return out
+
+
+def main(quick: bool = True):
+    out_rows = run()
+    lines = []
+    for app, rows in out_rows.items():
+        for scen in ("fail_1", "fail_half", "fail_pm1"):
+            sub = {t: r for s, t, r in rows if s == scen}
+            best = min(sub, key=sub.get)
+            worst = max(sub, key=sub.get)
+            lines.append(f"fig4,{app},{scen},best={best},"
+                         f"worst={worst}:{sub[worst]:.1f}x")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-scale
+timings only — the TPU numbers come from the §Roofline dry-run analysis).
+
+Prints name,us_per_call,check columns.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6, out
+
+
+def main(quick: bool = True):
+    rows, lines = [], []
+    # mandelbrot
+    xs = jnp.linspace(-2, 1, 256)
+    ys = jnp.linspace(-1.5, 1.5, 256)
+    cr, ci = jnp.meshgrid(xs, ys)
+    us, got = _time(ops.mandelbrot, cr, ci, max_iters=64, bm=128, bn=128)
+    ok = bool(np.array_equal(np.asarray(got),
+                             np.asarray(ref.mandelbrot(cr, ci, 64))))
+    rows.append(("mandelbrot_256x256_64it", us, ok))
+    # spin image
+    pts = jax.random.normal(jax.random.PRNGKey(0), (4096, 3))
+    ctr = jax.random.normal(jax.random.PRNGKey(1), (8, 3)) * 0.2
+    nrm = jax.random.normal(jax.random.PRNGKey(2), (8, 3))
+    nrm = nrm / jnp.linalg.norm(nrm, axis=-1, keepdims=True)
+    kw = dict(n_alpha=64, n_beta=64, alpha_max=2.5, beta_max=2.5)
+    us, got = _time(ops.spin_image, pts, ctr, nrm, block_p=512, **kw)
+    ok = bool(np.allclose(np.asarray(got),
+                          np.asarray(ref.spin_image(pts, ctr, nrm, **kw)),
+                          atol=1e-4))
+    rows.append(("spin_image_4096x8_64x64", us, ok))
+    # flash attention
+    q = jax.random.normal(jax.random.PRNGKey(3), (4, 512, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (4, 512, 64))
+    v = jax.random.normal(jax.random.PRNGKey(5), (4, 512, 64))
+    us, got = _time(ops.flash_attention, q, k, v, causal=True)
+    ok = bool(np.allclose(np.asarray(got),
+                          np.asarray(ref.attention(q, k, v)), atol=1e-4))
+    rows.append(("flash_attention_4x512x64", us, ok))
+    # wkv6
+    T, dk = 256, 64
+    r = jax.random.normal(jax.random.PRNGKey(6), (T, dk))
+    kk = jax.random.normal(jax.random.PRNGKey(7), (T, dk))
+    vv = jax.random.normal(jax.random.PRNGKey(8), (T, dk))
+    w = jnp.exp(-jnp.exp(jax.random.normal(jax.random.PRNGKey(9),
+                                           (T, dk)) * 0.4))
+    u = jax.random.normal(jax.random.PRNGKey(10), (dk,))
+    s0 = jnp.zeros((dk, dk))
+    us, got = _time(lambda *a: ops.wkv6(*a, chunk=32)[0], r, kk, vv, w, u,
+                    s0)
+    want, _ = ref.wkv6(r, kk, vv, w, u, s0)
+    ok = bool(np.allclose(np.asarray(got, np.float32), np.asarray(want),
+                          atol=1e-3, rtol=1e-2))
+    rows.append(("wkv6_256x64", us, ok))
+
+    common.write_csv("kernels", ["kernel", "us_per_call", "matches_ref"],
+                     rows)
+    for name, us, ok in rows:
+        lines.append(f"kernels,{name},{us:.0f}us,ref_match={ok}")
+        assert ok, name
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

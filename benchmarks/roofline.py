@@ -1,0 +1,87 @@
+"""Roofline table from the dry-run artifacts (launch.dryrun must have run;
+this module only aggregates artifacts/dryrun/*.json into
+artifacts/bench/roofline.csv and the EXPERIMENTS.md-ready summary).
+
+Per (arch x shape x mesh):
+  t_compute / t_memory / t_collective (s), dominant term, MODEL_FLOPS
+  (6ND or 6·N_active·D) and the useful-compute ratio MODEL_FLOPS/HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks import common
+from repro.configs import SHAPES, get_config
+from repro.models import build_model
+from repro.models.common import param_count
+
+DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def active_params(arch: str) -> int:
+    """N (dense) or N_active (MoE: shared + top-k of routed experts)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    n = param_count(model.param_specs())
+    if not cfg.moe:
+        return n
+    # subtract inactive routed-expert params
+    e, k, d, f = (cfg.n_routed_experts, cfg.top_k, cfg.d_model,
+                  cfg.d_expert)
+    per_expert = 3 * d * f
+    moe_layers = cfg.n_layers - cfg.n_dense_layers
+    return n - moe_layers * (e - k) * per_expert
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N·D where D = tokens processed by the step (decode: new tokens)."""
+    shape = SHAPES[shape_name]
+    n = active_params(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens               # forward only
+    tokens = shape.global_batch                # one new token per row
+    return 2.0 * n * tokens
+
+
+def main(quick: bool = True):
+    lines, rows = [], []
+    if not DRYRUN.exists():
+        return ["roofline,SKIP,no dry-run artifacts (run "
+                "`python -m repro.launch.dryrun` first)"]
+    for p in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("ok") is not True:
+            continue
+        arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        t = rec["roofline"]
+        mf = model_flops(arch, shape)
+        useful = mf / rec["hlo_flops"] if rec["hlo_flops"] else 0.0
+        bound = max(t.values())
+        # roofline fraction: measured compute term / the binding term
+        # (1.0 would mean the step is pure-MXU-bound at HLO flops)
+        frac = t["t_compute"] / bound if bound else 0.0
+        rows.append((arch, shape, mesh, t["t_compute"], t["t_memory"],
+                     t["t_collective"], rec["dominant"], mf,
+                     rec["hlo_flops"], useful, frac))
+    common.write_csv("roofline",
+                     ["arch", "shape", "mesh", "t_compute", "t_memory",
+                      "t_collective", "dominant", "model_flops",
+                      "hlo_flops", "useful_ratio", "roofline_fraction"],
+                     rows)
+    for r in rows:
+        lines.append(
+            f"roofline,{r[0]},{r[1]},{r[2]},tc={r[3]:.4f},tm={r[4]:.4f},"
+            f"tcoll={r[5]:.4f},dom={r[6]},useful={r[9]:.2f},"
+            f"frac={r[10]:.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

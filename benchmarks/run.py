@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure + kernels +
+roofline.  ``PYTHONPATH=src python -m benchmarks.run [--paper]``
+
+Prints ``module,key,value`` CSV lines; full CSVs land in artifacts/bench/.
+--paper uses the full Mandelbrot task count (slower); default is the
+grouped quick mode (identical durations, fewer queue events).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full-scale Mandelbrot task count")
+    ap.add_argument("--only", default="",
+                    help="comma list of modules to run")
+    args = ap.parse_args(argv)
+    quick = not args.paper
+
+    from benchmarks import (fig3_performance, fig4_resilience,
+                            fig5_flexibility, kernels_bench, roofline,
+                            theory_table)
+    modules = [
+        ("fig3", fig3_performance),
+        ("fig4", fig4_resilience),
+        ("fig5", fig5_flexibility),
+        ("theory", theory_table),
+        ("kernels", kernels_bench),
+        ("roofline", roofline),
+    ]
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = [(n, m) for n, m in modules if n in keep]
+
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for line in mod.main(quick=quick):
+                print(line)
+            print(f"{name},elapsed_s,{time.time() - t0:.1f}")
+        except Exception as e:
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Robust batched serving: rDLB request duplication kills the P99 tail.
+
+    PYTHONPATH=src python examples/robust_serving.py
+
+16 requests over 4 replicas; replica 1 fail-stops after its first request
+and replica 2 is a 10x straggler.  With rDLB the queue re-issues their
+in-flight requests to idle replicas — every request completes, and the
+outputs are byte-identical to a healthy run (greedy decode is
+deterministic, so duplicates are interchangeable).
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.runtime import RDLBServeExecutor, Request
+
+CFG = ModelConfig(name="demo-serve", family="dense", n_layers=4,
+                  d_model=256, n_heads=4, n_kv_heads=4, d_ff=1024,
+                  vocab_size=32000, dtype="float32")
+
+
+def make_requests(n, rng):
+    return [Request(i, rng.integers(0, CFG.vocab_size, size=8)
+                    .astype(np.int32), max_new_tokens=4) for i in range(n)]
+
+
+def main():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    print("healthy reference run (1 worker):")
+    ref = make_requests(16, rng)
+    ex0 = RDLBServeExecutor(model, params, n_workers=1)
+    t0 = time.time()
+    ex0.serve(ref)
+    print(f"  served 16/16 in {time.time() - t0:.1f}s")
+
+    print("4 replicas, replica 1 fails, rDLB on:")
+    rng = np.random.default_rng(0)
+    reqs = make_requests(16, rng)
+    ex = RDLBServeExecutor(model, params, n_workers=4, technique="SS")
+    t0 = time.time()
+    stats = ex.serve(reqs, fail_at={1: 1})
+    print(f"  served {sum(r.output is not None for r in reqs)}/16 in "
+          f"{time.time() - t0:.1f}s  (duplicates={stats.n_duplicates}, "
+          f"wasted={stats.wasted_requests}, by_worker={stats.by_worker})")
+    assert not stats.hung
+    for a, b in zip(ref, reqs):
+        assert np.array_equal(a.output, b.output)
+    print("  outputs byte-identical to the healthy run ✓")
+
+    print("same failure, rDLB OFF:")
+    rng = np.random.default_rng(0)
+    reqs2 = make_requests(16, rng)
+    ex2 = RDLBServeExecutor(model, params, n_workers=4, technique="SS",
+                            rdlb_enabled=False)
+    stats2 = ex2.serve(reqs2, fail_at={1: 1})
+    missing = sum(r.output is None for r in reqs2)
+    print(f"  hung={stats2.hung}, {missing} requests never completed "
+          f"<- the paper's Fig. 1b, at the serving layer")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end robust LM training with rDLB gradient-chunk scheduling.
+
+    PYTHONPATH=src python examples/robust_training.py            # ~20M, fast
+    PYTHONPATH=src python examples/robust_training.py --big      # ~100M
+    PYTHONPATH=src python examples/robust_training.py --steps 300
+
+Trains a llama-style decoder on the deterministic synthetic stream with:
+  * DLS (FAC) self-scheduling of gradient microbatches over 4 workers,
+  * a fail-stop of 2 workers at step 5 (training continues, loss-lessly:
+    the updates are bit-identical to a failure-free run),
+  * elastic shrink to the survivors,
+  * periodic checkpoints (the §3.1 checkpoint/restart baseline is the
+    --no-rdlb path of launch.train).
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.data import batch_for_step
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.runtime import FaultPlan, RDLBTrainExecutor
+from repro.runtime.elastic import shrink_to_survivors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--big", action="store_true", help="~100M params")
+    ap.add_argument("--ckpt-dir", default="/tmp/rdlb_example_ckpt")
+    args = ap.parse_args()
+
+    if args.big:
+        cfg = ModelConfig(name="demo-100m", family="dense", n_layers=12,
+                          d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+                          vocab_size=50304, dtype="float32")
+        batch, seq = 16, 256
+    else:
+        cfg = ModelConfig(name="demo-20m", family="dense", n_layers=6,
+                          d_model=320, n_heads=8, n_kv_heads=4, d_ff=1280,
+                          vocab_size=32000, dtype="float32")
+        batch, seq = 16, 128
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model {cfg.name}: {n_params / 1e6:.1f}M params")
+
+    ex = RDLBTrainExecutor(model, n_workers=4, n_tasks=8, technique="FAC",
+                           optimizer="adamw", lr=3e-4)
+    opt_state = ex.opt.init(params)
+    ckpt = CheckpointManager(args.ckpt_dir, interval=5, keep=2)
+
+    for step in range(args.steps):
+        data = batch_for_step(cfg, step, batch, seq)
+        plan = None
+        if step == 5:
+            plan = FaultPlan(fail_after={1: 0, 2: 1})
+            print("step 5: killing workers 1 and 2 mid-step")
+        t0 = time.time()
+        res = ex.train_step(params, opt_state, data, fault_plan=plan)
+        assert not res.hung
+        params, opt_state = res.params, res.opt_state
+        extra = (f" dups={res.n_duplicates}" if res.n_duplicates else "")
+        print(f"step {step:3d}: loss={res.loss:.4f} "
+              f"workers={len(res.survivors)} ({time.time() - t0:.1f}s)"
+              f"{extra}")
+        shrink_to_survivors(ex)
+        ckpt.maybe_save(step + 1, {"params": params, "opt": opt_state})
+    ckpt.wait()
+    print("done — training survived 2/4 worker failures without losing "
+          "a single gradient contribution.")
+
+
+if __name__ == "__main__":
+    main()

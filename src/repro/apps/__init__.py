@@ -1,0 +1,1 @@
+from repro.apps import mandelbrot, psia  # noqa: F401

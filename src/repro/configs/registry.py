@@ -1,0 +1,155 @@
+"""Architecture registry + the assigned input-shape grid.
+
+10 architectures x 4 shapes = 40 cells.  ``long_500k`` requires
+sub-quadratic attention => only rwkv6-1.6b and hymba-1.5b run it; the 8
+full-attention archs record the cell N/A-by-design (DESIGN.md §4).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation — consumed by the dry-run
+and the roofline benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "qwen3-4b": "qwen3_4b",
+    "olmo-1b": "olmo_1b",
+    "qwen2-72b": "qwen2_72b",
+    "paligemma-3b": "paligemma_3b",
+    "whisper-tiny": "whisper_tiny",
+    "rwkv6-1.6b": "rwkv6_1b6",
+    "hymba-1.5b": "hymba_1b5",
+}
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise ValueError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+# ------------------------------------------------------------------ shapes
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """long_500k only for sub-quadratic archs (others: N/A-by-design)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        names.append("long_500k")
+    return names
+
+
+# ------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def modality_inputs(cfg: ModelConfig, batch: int) -> dict:
+    """Frontend STUBS: precomputed patch/frame embeddings."""
+    out = {}
+    if cfg.family == "vlm":
+        out["patches"] = _sds((batch, cfg.n_patch_tokens, cfg.d_model),
+                              jnp.float32)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                             jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, model=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        specs.update(modality_inputs(cfg, B))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        specs.update(modality_inputs(cfg, B))
+        return specs
+    # decode: one new token against a cache of S entries
+    if model is None:
+        from repro.models import build_model
+        model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "cache": cache,
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def smoke_batch(cfg: ModelConfig, key=None, batch: int = 2,
+                seq: int = 16) -> dict:
+    """Concrete tiny batch for the per-arch smoke tests (CPU)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq + 1), 0, cfg.vocab_size)
+    out = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k2, (batch, cfg.n_patch_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+# --------------------------------------------------------- train settings
+_TRAIN = {
+    # arch: (num_microbatches for train_4k, optimizer)
+    "deepseek-v3-671b": (32, "adafactor"),
+    "deepseek-v2-lite-16b": (16, "adafactor"),   # 16B: fp32 Adam moments
+                                                 # alone are 8 GB/chip
+    "deepseek-coder-33b": (8, "adafactor"),
+    "qwen3-4b": (4, "adamw"),
+    "olmo-1b": (2, "adamw"),
+    "qwen2-72b": (8, "adafactor"),
+    "paligemma-3b": (4, "adamw"),
+    "whisper-tiny": (1, "adamw"),
+    "rwkv6-1.6b": (4, "adamw"),
+    "hymba-1.5b": (4, "adamw"),
+}
+
+
+def train_config(arch: str) -> dict:
+    ub, opt = _TRAIN[arch]
+    return {"num_microbatches": ub, "optimizer": opt}

@@ -1,0 +1,345 @@
+"""Dynamic loop self-scheduling (DLS) techniques.
+
+Implements the 13 techniques of the DLS4LB library that the paper extends
+(Mohammed, Cavelan, Ciorba 2019, §2.1 + Table 1):
+
+    STATIC                          static block scheduling
+    SS, FSC, mFSC, GSS, TSS,        nonadaptive dynamic
+    FAC, WF, RAND
+    AWF-B, AWF-C, AWF-D, AWF-E, AF  adaptive dynamic
+
+Each technique is a *chunk-size calculator*: given the scheduler state (total
+iterations N, PE count P, remaining unscheduled R, and — for the adaptive
+family — per-PE performance measurements), it returns the size of the next
+chunk to hand to a requesting PE.  The calculators are deliberately pure
+Python (the scheduler layer of the paper is host-side control logic, not
+device compute); the *work itself* runs in JAX (see repro.apps / repro.runtime).
+
+References for the formulas:
+  SS     Tang & Yew 1986            chunk = 1
+  FSC    Kruskal & Weiss 1985       chunk = (sqrt(2)·N·h / (σ·P·sqrt(log P)))^(2/3)
+  mFSC   Banicescu et al. 2013      fixed chunk giving ≈ as many chunks as FAC
+  GSS    Polychronopoulos & Kuck 87 chunk = ceil(R / P)
+  TSS    Tzen & Ni 1993             linear decrease from f=ceil(N/2P) to l=1
+  FAC    Hummel et al. 1992         practical variant: batch = ceil(R/2), split over P
+  WF     Hummel et al. 1996         FAC batch split ∝ fixed PE weights
+  RAND   Ciorba et al. 2018         chunk ~ U[N/(100P), N/(2P)]
+  AWF-B/C/D/E  Carino&Banicescu 08  WF with weights re-learned per batch/chunk (±sched overhead)
+  AF     Banicescu & Liu 2000       per-PE chunk from running (μ_i, σ_i) estimates
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Optional
+
+ALL_TECHNIQUES = (
+    "STATIC", "SS", "FSC", "mFSC", "GSS", "TSS", "FAC", "WF", "RAND",
+    "AWF-B", "AWF-C", "AWF-D", "AWF-E", "AF",
+)
+DYNAMIC_TECHNIQUES = tuple(t for t in ALL_TECHNIQUES if t != "STATIC")
+ADAPTIVE_TECHNIQUES = ("AWF-B", "AWF-C", "AWF-D", "AWF-E", "AF")
+NONADAPTIVE_TECHNIQUES = tuple(
+    t for t in DYNAMIC_TECHNIQUES if t not in ADAPTIVE_TECHNIQUES)
+
+
+@dataclasses.dataclass
+class PEStats:
+    """Per-PE performance measurements fed back by the scheduler.
+
+    The adaptive techniques (AWF-*, AF) consume these; the nonadaptive ones
+    ignore them.
+    """
+    iters_done: int = 0          # total loop iterations completed
+    compute_time: float = 0.0    # total time spent computing chunks
+    sched_time: float = 0.0      # total scheduling overhead attributed to PE
+    # Welford running stats of the *per-iteration* time (for AF).
+    n_samples: int = 0
+    mean_iter_time: float = 0.0
+    m2_iter_time: float = 0.0
+
+    def record_chunk(self, size: int, compute_time: float,
+                     sched_time: float) -> None:
+        self.iters_done += size
+        self.compute_time += compute_time
+        self.sched_time += sched_time
+        # Treat the chunk's mean per-iteration time as one sample (the chunk
+        # is the measurement granularity the MPI library has).
+        if size > 0 and compute_time >= 0:
+            x = compute_time / size
+            self.n_samples += 1
+            d = x - self.mean_iter_time
+            self.mean_iter_time += d / self.n_samples
+            self.m2_iter_time += d * (x - self.mean_iter_time)
+
+    @property
+    def var_iter_time(self) -> float:
+        if self.n_samples < 2:
+            return 0.0
+        return self.m2_iter_time / (self.n_samples - 1)
+
+    def rate(self, include_overhead: bool) -> float:
+        """Iterations/second; 0.0 when nothing measured yet."""
+        t = self.compute_time + (self.sched_time if include_overhead else 0.0)
+        if t <= 0.0 or self.iters_done <= 0:
+            return 0.0
+        return self.iters_done / t
+
+
+class Technique:
+    """Base chunk-size calculator.
+
+    Subclasses override ``_chunk``.  ``next_chunk`` clamps to [1, remaining].
+    """
+
+    name: str = "?"
+    adaptive: bool = False
+
+    def __init__(self, N: int, P: int, *, h: float = 1e-4,
+                 sigma: float = 1.0, mu: float = 1.0,
+                 weights: Optional[list[float]] = None,
+                 seed: int = 0) -> None:
+        if N <= 0 or P <= 0:
+            raise ValueError(f"need N>0 and P>0, got N={N} P={P}")
+        self.N = N
+        self.P = P
+        self.h = h          # scheduling overhead estimate (FSC)
+        self.sigma = sigma  # iteration-time stddev estimate (FSC)
+        self.mu = mu        # iteration-time mean estimate
+        self.rng = random.Random(seed)
+        # Fixed relative weights for WF (normalized to sum to P).
+        w = weights if weights is not None else [1.0] * P
+        s = sum(w)
+        self.weights = [x * P / s for x in w]
+        self.stats = [PEStats() for _ in range(P)]
+        # FAC-family batch state.
+        self._batch_left = 0
+        self._batch_chunk = 0
+        self._batch_index = 0
+
+    # ------------------------------------------------------------------ API
+    def next_chunk(self, pe: int, remaining: int) -> int:
+        if remaining <= 0:
+            return 0
+        size = self._chunk(pe, remaining)
+        return max(1, min(int(size), remaining))
+
+    def record(self, pe: int, size: int, compute_time: float,
+               sched_time: float = 0.0) -> None:
+        """Feed back a completed chunk (adaptive techniques learn from it)."""
+        self.stats[pe].record_chunk(size, compute_time, sched_time)
+
+    # ------------------------------------------------------ helpers
+    def _chunk(self, pe: int, remaining: int) -> int:
+        raise NotImplementedError
+
+    def _next_batch_chunk(self, remaining: int, weight: float = 1.0) -> int:
+        """Practical FAC batching: batch = ceil(R/2) split equally over P.
+
+        ``weight`` scales the equal share (WF / AWF family).
+        """
+        if self._batch_left <= 0:
+            self._batch_left = math.ceil(remaining / 2)
+            self._batch_chunk = max(1, math.ceil(self._batch_left / self.P))
+            self._batch_index += 1
+        size = max(1, math.ceil(self._batch_chunk * weight))
+        size = min(size, self._batch_left)
+        self._batch_left -= size
+        return size
+
+    def _learned_weight(self, pe: int, include_overhead: bool) -> float:
+        """AWF weight: PE rate normalized so that weights sum to P."""
+        rates = [s.rate(include_overhead) for s in self.stats]
+        if rates[pe] <= 0.0:
+            return 1.0
+        live = [r for r in rates if r > 0.0]
+        mean_rate = sum(live) / len(live)
+        return rates[pe] / mean_rate
+
+
+# ---------------------------------------------------------------- concrete
+class Static(Technique):
+    name = "STATIC"
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        return math.ceil(self.N / self.P)
+
+
+class SS(Technique):
+    name = "SS"
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        return 1
+
+
+class FSC(Technique):
+    name = "FSC"
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        logp = max(math.log(self.P), 1e-9)
+        num = math.sqrt(2.0) * self.N * self.h
+        den = max(self.sigma * self.P * math.sqrt(logp), 1e-12)
+        return max(1, round((num / den) ** (2.0 / 3.0)))
+
+
+def fac_chunk_count(N: int, P: int) -> int:
+    """Number of chunks practical-FAC produces for (N, P)."""
+    count, R = 0, N
+    while R > 0:
+        batch = math.ceil(R / 2)
+        chunk = max(1, math.ceil(batch / P))
+        n_full = batch // chunk
+        count += n_full + (1 if batch % chunk else 0)
+        R -= batch
+    return count
+
+
+class MFSC(Technique):
+    name = "mFSC"
+
+    def __init__(self, N: int, P: int, **kw) -> None:
+        super().__init__(N, P, **kw)
+        self._size = max(1, math.ceil(N / fac_chunk_count(N, P)))
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        return self._size
+
+
+class GSS(Technique):
+    name = "GSS"
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        return math.ceil(remaining / self.P)
+
+
+class TSS(Technique):
+    name = "TSS"
+
+    def __init__(self, N: int, P: int, **kw) -> None:
+        super().__init__(N, P, **kw)
+        self.f = math.ceil(N / (2 * P))   # first chunk
+        self.l = 1                         # last chunk
+        n_chunks = max(1, math.ceil(2 * N / (self.f + self.l)))
+        self.delta = (self.f - self.l) / max(1, n_chunks - 1)
+        self._i = 0
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        size = max(1, round(self.f - self._i * self.delta))
+        self._i += 1
+        return size
+
+
+class FAC(Technique):
+    name = "FAC"
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        return self._next_batch_chunk(remaining)
+
+
+class WF(Technique):
+    name = "WF"
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        return self._next_batch_chunk(remaining, self.weights[pe])
+
+
+class Rand(Technique):
+    name = "RAND"
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        lo = max(1, math.floor(self.N / (100 * self.P)))
+        hi = max(lo, math.ceil(self.N / (2 * self.P)))
+        return self.rng.randint(lo, hi)
+
+
+class AWF(Technique):
+    """AWF-B/C/D/E: weighted factoring with learned weights.
+
+    B: weights updated per *batch*, compute time only.
+    C: weights updated per *chunk*, compute time only.
+    D: per batch, compute + scheduling overhead.
+    E: per chunk, compute + scheduling overhead.
+
+    With the chunk-granularity measurement model used here, "per chunk"
+    updates see the freshest stats at every request, while "per batch"
+    variants re-evaluate weights only at batch boundaries.
+    """
+    adaptive = True
+
+    def __init__(self, N: int, P: int, variant: str = "B", **kw) -> None:
+        super().__init__(N, P, **kw)
+        if variant not in ("B", "C", "D", "E"):
+            raise ValueError(f"bad AWF variant {variant!r}")
+        self.variant = variant
+        self.name = f"AWF-{variant}"
+        self._cached_weights = [1.0] * P
+
+    @property
+    def barrier_per_batch(self) -> bool:
+        """Batch-granularity variants (B/D) recompute RELATIVE weights
+        from every PE's measurements: the master cannot compose the next
+        batch until all chunks of the previous batch are reported.  This
+        is the mechanism behind the paper's catastrophic AWF degradation
+        under latency perturbations without rDLB — and behind rDLB's
+        large flexibility boost (duplicate reports satisfy the barrier)."""
+        return self.variant in ("B", "D")
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        include_oh = self.variant in ("D", "E")
+        per_chunk = self.variant in ("C", "E")
+        at_batch_boundary = self._batch_left <= 0
+        if per_chunk or at_batch_boundary:
+            self._cached_weights[pe] = self._learned_weight(pe, include_oh)
+        return self._next_batch_chunk(remaining, self._cached_weights[pe])
+
+
+class AF(Technique):
+    """Adaptive Factoring (Banicescu & Liu 2000).
+
+    chunk_i = (D + 2T − sqrt(D² + 4·D·T)) / (2·μ_i) with
+      D = Σ_j σ_j²/μ_j   (time)
+      T = R / Σ_j 1/μ_j  (time estimate of remaining work under all PEs)
+
+    Until a PE has ≥2 measurements it falls back to the FAC batch rule
+    (the library needs a bootstrap chunk to measure anything).
+    """
+    name = "AF"
+    adaptive = True
+
+    def _chunk(self, pe: int, remaining: int) -> int:
+        mus = [s.mean_iter_time for s in self.stats]
+        if self.stats[pe].n_samples < 2 or mus[pe] <= 0.0:
+            return self._next_batch_chunk(remaining)
+        live = [(s.mean_iter_time, s.var_iter_time)
+                for s in self.stats if s.mean_iter_time > 0.0]
+        D = sum(v / m for m, v in live)
+        inv = sum(1.0 / m for m, _ in live)
+        T = remaining / max(inv, 1e-12)
+        c = (D + 2.0 * T - math.sqrt(D * D + 4.0 * D * T)) / (2.0 * mus[pe])
+        return max(1, math.floor(c))
+
+
+_FACTORY = {
+    "STATIC": Static,
+    "SS": SS,
+    "FSC": FSC,
+    "mFSC": MFSC,
+    "GSS": GSS,
+    "TSS": TSS,
+    "FAC": FAC,
+    "WF": WF,
+    "RAND": Rand,
+    "AF": AF,
+}
+
+
+def make_technique(name: str, N: int, P: int, **kw) -> Technique:
+    """Factory: ``make_technique("AWF-B", N, P)`` etc."""
+    if name.startswith("AWF-"):
+        return AWF(N, P, variant=name.split("-", 1)[1], **kw)
+    if name not in _FACTORY:
+        raise ValueError(f"unknown DLS technique {name!r}; "
+                         f"choose from {ALL_TECHNIQUES}")
+    return _FACTORY[name](N, P, **kw)

@@ -1,0 +1,281 @@
+"""rDLB: the paper's core contribution — a robust central work queue.
+
+Every task (loop iteration / grad-accum chunk / serving request) carries a
+flag:
+
+    UNSCHEDULED --assign--> SCHEDULED --report--> FINISHED
+
+Ordinary (non-robust) DLS stops assigning once every task is SCHEDULED; if a
+PE then fails or straggles, its in-flight tasks never finish and the whole
+execution hangs (paper Fig. 1b).  rDLB keeps assigning: once UNSCHEDULED is
+exhausted, idle PEs receive *duplicates* of SCHEDULED-but-unfinished tasks,
+oldest assignment first.  The first completion wins; late duplicates are
+discarded idempotently.  No failure or perturbation detection is needed —
+the duplicate work rides on end-of-loop idle time (paper §3).
+
+The queue is deliberately synchronous-and-small: O(1) state per task.  Both
+the discrete-event simulator (repro.core.simulator — the *timing* replica of
+the paper's experiments) and the real JAX executor (repro.runtime.executor —
+the *numerics*) drive this exact class, so simulated and executed schedules
+cannot diverge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from typing import Optional, Sequence
+
+from repro.core import dls
+
+
+class Flag(enum.IntEnum):
+    UNSCHEDULED = 0
+    SCHEDULED = 1
+    FINISHED = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """A contiguous range of task ids [start, start+size) handed to a PE."""
+    start: int
+    size: int
+    pe: int                 # PE the assignment was made to
+    seq: int                # global assignment sequence number
+    duplicate: bool = False  # True iff this is an rDLB re-assignment
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.size
+
+    def tasks(self) -> range:
+        return range(self.start, self.stop)
+
+
+class RobustQueue:
+    """Central work queue implementing DLS + rDLB.
+
+    Parameters
+    ----------
+    N:            total number of tasks.
+    technique:    a ``repro.core.dls.Technique`` (owns chunk sizing).
+    rdlb_enabled: if False, behaves like the non-robust DLS4LB — returns
+                  ``None`` from ``request`` once everything is scheduled,
+                  even if unfinished work remains (the paper's hang).
+    max_duplicates: cap on concurrent duplicates per original chunk
+                  (the paper uses unbounded; we default to P-1-equivalent
+                  "unbounded" but expose the knob for the executor).
+    """
+
+    def __init__(self, N: int, technique: dls.Technique, *,
+                 rdlb_enabled: bool = True,
+                 max_duplicates: Optional[int] = None,
+                 barrier_max_duplicates: Optional[int] = 1) -> None:
+        self.N = N
+        self.technique = technique
+        self.rdlb_enabled = rdlb_enabled
+        self.max_duplicates = max_duplicates
+        # During a BATCH-WEIGHT BARRIER (AWF-B/D), re-issue is capped to 1
+        # live duplicate per chunk AND only granted on a SUSTAINED stall
+        # (a PE's second consecutive barrier miss): under high task-time
+        # variance an eager duplicate of a huge chunk would otherwise
+        # occupy a healthy PE that real (unscheduled) work will need as
+        # soon as the barrier clears — a beyond-paper finding
+        # (EXPERIMENTS §Paper-validation).
+        self.barrier_max_duplicates = barrier_max_duplicates
+        # pe -> consecutive barrier misses.  The cap is DAMPING, not a hard
+        # limit: after 3 misses it is lifted, because a capped duplicate may
+        # itself be held by a failed PE (which the master, by design, cannot
+        # detect) — a hard cap would livelock.
+        self._barrier_waiters: dict[int, int] = {}
+        self.flags = bytearray(N)              # Flag per task
+        self._next_unscheduled = 0             # frontier: everything before is scheduled
+        self._n_finished = 0
+        self._seq = 0
+        self._lock = threading.Lock()
+        # Original (non-duplicate) chunks in assignment order — the rDLB
+        # re-issue scan walks these oldest-first (paper: "the first
+        # scheduled and unfinished task is assigned").  Bookkeeping is
+        # O(1) amortized per request/report: each task knows its owning
+        # original chunk; finished chunks are lazily dropped from the
+        # re-issue ring.
+        self._assigned: list[Chunk] = []
+        self._by_seq: dict[int, Chunk] = {}
+        self._task_owner = [-1] * N            # task -> original chunk seq
+        self._chunk_left: dict[int, int] = {}  # seq -> unfinished tasks
+        self._ring: list[int] = []             # unfinished original seqs
+        self._reissue_ptr = 0
+        self._dup_count: dict[int, int] = {}   # chunk.seq -> live duplicates
+        # bookkeeping for metrics
+        self.n_assignments = 0
+        self.n_duplicates = 0
+        self.wasted_tasks = 0                  # duplicate executions discarded
+        self.wait_hint = None                  # set by request(): "barrier"?
+
+    # ------------------------------------------------------------- queries
+    @property
+    def all_scheduled(self) -> bool:
+        return self._next_unscheduled >= self.N
+
+    @property
+    def done(self) -> bool:
+        return self._n_finished >= self.N
+
+    @property
+    def n_finished(self) -> int:
+        return self._n_finished
+
+    def unfinished_tasks(self) -> list[int]:
+        return [i for i in range(self.N) if self.flags[i] != Flag.FINISHED]
+
+    # ------------------------------------------------------------ protocol
+    @property
+    def at_batch_barrier(self) -> bool:
+        """True when the technique cannot size the next chunk yet: an
+        adaptive batch-granularity technique (AWF-B/D) is at a batch
+        boundary with unfinished scheduled work outstanding (it needs
+        every PE's report to recompute relative weights)."""
+        if not getattr(self.technique, "barrier_per_batch", False):
+            return False
+        if getattr(self.technique, "_batch_left", 1) > 0:
+            return False
+        return self._n_finished < self._next_unscheduled
+
+    def request(self, pe: int) -> Optional[Chunk]:
+        """A free PE asks for work.  Returns a Chunk or None.
+
+        None means: nothing to hand out *right now*.  With rDLB that only
+        happens when the loop is done (or every unfinished chunk is already
+        duplicated up to ``max_duplicates``); without rDLB it happens as
+        soon as everything is merely scheduled — or while the technique is
+        stalled at a batch-weight barrier (``wait_hint`` distinguishes the
+        two: a barrier clears when reports arrive; the post-scheduling wait
+        never does).
+        """
+        with self._lock:
+            self.wait_hint = None
+            if self.done:
+                return None
+            remaining = self.N - self._next_unscheduled
+            if remaining > 0:
+                if self.at_batch_barrier:
+                    # master is collecting weights; rDLB rides the stall
+                    # by re-issuing unfinished work of the pending batch —
+                    # but only once the stall is sustained (2nd miss);
+                    # after the 3rd miss the duplicate cap is lifted (a
+                    # capped duplicate may be on a failed PE).
+                    self.wait_hint = "barrier"
+                    misses = self._barrier_waiters.get(pe, 0)
+                    if self.rdlb_enabled and misses >= 1:
+                        cap = (self.barrier_max_duplicates
+                               if misses < 3 else None)
+                        dup = self._reissue(pe, max_dup=cap)
+                        if dup is not None:
+                            return dup
+                    self._barrier_waiters[pe] = misses + 1
+                    return None
+                self._barrier_waiters.clear()
+                size = self.technique.next_chunk(pe, remaining)
+                chunk = Chunk(self._next_unscheduled, size, pe, self._seq)
+                self._seq += 1
+                for i in chunk.tasks():
+                    self.flags[i] = Flag.SCHEDULED
+                    self._task_owner[i] = chunk.seq
+                self._next_unscheduled += size
+                self._assigned.append(chunk)
+                self._by_seq[chunk.seq] = chunk
+                self._chunk_left[chunk.seq] = size
+                self._ring.append(chunk.seq)
+                self.n_assignments += 1
+                return chunk
+            if not self.rdlb_enabled:
+                return None                      # non-robust: hang forever
+            return self._reissue(pe)
+
+    def _reissue(self, pe: int,
+                 max_dup: Optional[int] = None) -> Optional[Chunk]:
+        """rDLB: hand out the oldest SCHEDULED-but-unfinished chunk.
+
+        Walks the ring of unfinished original chunks round-robin,
+        lazily dropping finished entries — O(1) amortized."""
+        cap = max_dup if max_dup is not None else self.max_duplicates
+        checked = 0
+        while self._ring and checked < len(self._ring):
+            if self._reissue_ptr >= len(self._ring):
+                self._reissue_ptr = 0
+            seq = self._ring[self._reissue_ptr]
+            if self._chunk_left.get(seq, 0) <= 0:     # finished: drop
+                self._ring.pop(self._reissue_ptr)
+                continue
+            checked += 1
+            if cap is not None and self._dup_count.get(seq, 0) >= cap:
+                self._reissue_ptr += 1
+                continue
+            self._reissue_ptr += 1
+            cand = self._by_seq[seq]
+            self._dup_count[seq] = self._dup_count.get(seq, 0) + 1
+            dup = Chunk(cand.start, cand.size, pe, self._seq,
+                        duplicate=True)
+            self._seq += 1
+            self.n_assignments += 1
+            self.n_duplicates += 1
+            return dup
+        return None
+
+    def report(self, chunk: Chunk) -> int:
+        """A PE reports a completed chunk.  Returns #tasks newly finished.
+
+        Idempotent: tasks already FINISHED (a duplicate raced us) are
+        counted as wasted work, not double-finished.
+        """
+        with self._lock:
+            newly = 0
+            for i in chunk.tasks():
+                if self.flags[i] != Flag.FINISHED:
+                    self.flags[i] = Flag.FINISHED
+                    newly += 1
+                    owner = self._task_owner[i]
+                    if owner >= 0:
+                        self._chunk_left[owner] -= 1
+                else:
+                    self.wasted_tasks += 1
+            self._n_finished += newly
+            if chunk.duplicate:
+                c = self._dup_count.get(chunk.seq)
+                if c:
+                    self._dup_count[chunk.seq] = c - 1
+            return newly
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        return dict(
+            n_tasks=self.N,
+            n_finished=self._n_finished,
+            n_assignments=self.n_assignments,
+            n_duplicates=self.n_duplicates,
+            wasted_tasks=self.wasted_tasks,
+        )
+
+
+def run_to_completion(queue: RobustQueue, pes: Sequence[int],
+                      max_rounds: int = 10**7) -> list[Chunk]:
+    """Drain ``queue`` with round-robin synchronous PEs (test helper).
+
+    Returns the assignment log.  Raises if the queue cannot finish (e.g.
+    rdlb_enabled=False and a chunk is never reported).
+    """
+    log: list[Chunk] = []
+    rounds = 0
+    while not queue.done:
+        progressed = False
+        for pe in pes:
+            chunk = queue.request(pe)
+            if chunk is not None:
+                queue.report(chunk)
+                log.append(chunk)
+                progressed = True
+        rounds += 1
+        if not progressed or rounds > max_rounds:
+            raise RuntimeError("queue stalled (non-robust hang?)")
+    return log

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticTokens, batch_for_step, chunk_batch,
+)

@@ -1,0 +1,4 @@
+from repro.distributed.partitioner import (  # noqa: F401
+    AxisRules, Partitioner, current_partitioner, set_partitioner,
+    logical_constraint,
+)

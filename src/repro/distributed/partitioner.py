@@ -1,0 +1,173 @@
+"""Logical-axis partitioner: MaxText-style rules → NamedSharding.
+
+Every parameter / activation in ``repro.models`` is annotated with *logical*
+axis names ("batch", "embed", "heads", "expert", ...).  A rule set maps each
+logical name to a physical mesh axis (or ``None`` = replicated).  This keeps
+the model code mesh-agnostic: the same model lowers on the single-pod
+``(data, model)`` mesh, the multi-pod ``(pod, data, model)`` mesh, or no mesh
+at all (CPU smoke tests — constraints become no-ops).
+
+Rule sets
+---------
+``base_rules``        TP over "model" (heads / mlp / vocab / experts), DP over
+                      ("pod","data") for the batch.
+``fsdp_rules``        base + "embed" → "data": ZeRO-3-style parameter (and
+                      therefore optimizer-state and gradient) sharding for the
+                      ≥33B architectures that cannot replicate params per chip.
+``seq_rules``         base + activation sequence axis → "model" between blocks
+                      (sequence parallelism for the norm/elementwise regions).
+
+A rule only applies when the dimension is divisible by the mesh-axis size —
+otherwise the dim falls back to replicated (GSPMD would pad; we prefer the
+explicit fallback so ``memory_analysis`` stays honest).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Optional[str]
+LogicalAxes = Sequence[AxisName]
+RuleValue = Union[None, str, tuple]
+
+
+# --------------------------------------------------------------------- rules
+BASE_RULES: dict[str, RuleValue] = {
+    "batch": ("pod", "data"),       # data parallelism across pods + data axis
+    "seq": None,
+    "cache_seq": "model",           # decode KV-cache length: sequence-
+                                    # sharded cache (32k x many layers does
+                                    # not fit per-chip replicated; partial
+                                    # attention + reduction is XLA-native)
+    "embed": None,                  # residual stream (fsdp_rules shards it)
+    "mlp": "model",                 # FFN hidden
+    "heads": "model",               # attention heads (q)
+    "kv_heads": "model",            # attention kv heads (GQA)
+    "vocab": "model",               # embedding / logits vocab
+    "expert": "model",              # MoE expert parallelism
+    "expert_mlp": None,             # per-expert FFN hidden (EP already shards)
+    "kv_lora": None,                # MLA compressed dims
+    "q_lora": None,
+    "layers": None,                 # stacked scan-over-layers axis
+    "conv": None,
+    "state": None,                  # SSM / RWKV state dims
+    "act_embed": None,              # activation residual dim (act. constraint)
+}
+
+
+def make_rules(*, fsdp: bool = False, seq_shard: bool = False,
+               expert_mlp_shard: bool = False,
+               overrides: Optional[Mapping[str, RuleValue]] = None
+               ) -> dict[str, RuleValue]:
+    rules = dict(BASE_RULES)
+    if fsdp:
+        rules["embed"] = "data"          # ZeRO-3 parameter sharding
+    if seq_shard:
+        rules["seq"] = "model"           # SP on activations between blocks
+        rules["cache_seq"] = "data"
+    if expert_mlp_shard:
+        rules["expert_mlp"] = "model"
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    rules: Mapping[str, RuleValue]
+
+    def spec(self, logical_axes: LogicalAxes,
+             shape: Optional[Sequence[int]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+        """Resolve logical axes to a PartitionSpec.
+
+        When ``shape``+``mesh`` are given, a mapping is dropped (→ replicated)
+        if the dim is not divisible by the mesh-axes size, and a mesh axis is
+        never used twice in one spec.
+        """
+        parts = []
+        used: set[str] = set()
+        for i, name in enumerate(logical_axes):
+            rule = self.rules.get(name) if name is not None else None
+            if rule is None:
+                parts.append(None)
+                continue
+            axes = (rule,) if isinstance(rule, str) else tuple(rule)
+            # keep only mesh axes that exist and are unused
+            if mesh is not None:
+                axes = tuple(a for a in axes if a in mesh.shape)
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                parts.append(None)
+                continue
+            if shape is not None and mesh is not None:
+                total = 1
+                for a in axes:
+                    total *= mesh.shape[a]
+                if total == 0 or shape[i] % total != 0:
+                    parts.append(None)
+                    continue
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else axes)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+
+# ---------------------------------------------------------------- partitioner
+@dataclasses.dataclass
+class Partitioner:
+    """Binds a mesh + rule set; resolves shardings for params & activations."""
+    mesh: Optional[Mesh]
+    rules: AxisRules
+
+    def sharding(self, logical_axes: LogicalAxes,
+                 shape: Optional[Sequence[int]] = None
+                 ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        spec = self.rules.spec(logical_axes, shape, self.mesh)
+        return NamedSharding(self.mesh, spec)
+
+    def spec(self, logical_axes: LogicalAxes,
+             shape: Optional[Sequence[int]] = None) -> P:
+        return self.rules.spec(logical_axes, shape, self.mesh)
+
+    def constrain(self, x: jax.Array, logical_axes: LogicalAxes) -> jax.Array:
+        """with_sharding_constraint on an activation (no-op without mesh)."""
+        if self.mesh is None or self.mesh.empty:
+            return x
+        spec = self.rules.spec(logical_axes, x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+_STATE = threading.local()
+
+
+def current_partitioner() -> Optional[Partitioner]:
+    return getattr(_STATE, "partitioner", None)
+
+
+@contextlib.contextmanager
+def set_partitioner(p: Optional[Partitioner]):
+    prev = current_partitioner()
+    _STATE.partitioner = p
+    try:
+        yield p
+    finally:
+        _STATE.partitioner = prev
+
+
+def logical_constraint(x: jax.Array, logical_axes: LogicalAxes) -> jax.Array:
+    """Module-level activation constraint honoring the ambient partitioner."""
+    p = current_partitioner()
+    if p is None:
+        return x
+    return p.constrain(x, logical_axes)

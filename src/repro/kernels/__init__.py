@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+mandelbrot        escape-time iteration (the paper's high-variance app)
+spin_image        PSIA spin-image binning as MXU one-hot matmuls
+flash_attention   online-softmax attention with causal block skip
+rwkv6_scan        chunked WKV6 recurrence (state in VMEM scratch)
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jitted public
+wrapper in ``ops.py``; tests sweep shapes/dtypes in interpret mode
+(kernel bodies execute on CPU; TPU is the compile target).
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,99 @@
+"""Flash attention Pallas kernel (online softmax, causal block skip).
+
+Grid (BH, n_q_blocks, n_kv_blocks): the first two axes are parallel, the
+kv axis is sequential ("arbitrary") with the running (m, l, acc) state in
+VMEM scratch — the canonical TPU flash tiling.  Block shapes default to
+(128 q x 128 kv x Dh): MXU-aligned (128 lanes) and ~小 VMEM footprint
+(q/k/v blocks + f32 acc ~ 128*Dh*(2*3+4) bytes).
+
+Causal skip: kv blocks strictly above the diagonal contribute nothing;
+the body is wrapped in pl.when so those grid steps do no FLOPs — on
+hardware this halves the attention compute vs. the masked-full variant
+(the §Perf hillclimb measures exactly this on the lowered HLO of the
+pure-JAX twin in repro.models.attention.flash_attend).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            scale: float, causal: bool, bq: int, bk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    run = (not causal) or (kj * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0].astype(jnp.float32)                   # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                   # (bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * bq + jnp.arange(bq)
+            k_pos = kj * bk + jnp.arange(bk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))        # (bq,)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(axis=-1)
+        acc_s[...] = (acc_s[...] * corr[:, None]
+                      + jax.lax.dot_general(
+                          p, v, (((1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+        m_s[...] = m_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _():
+        out = acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q,k,v: (B, S, D) per-head layout -> (B, S, Dv)."""
+    B, S, D = q.shape
+    Dv = v.shape[-1]
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = scale if scale is not None else D ** -0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
+                          bk=bk),
+        grid=(B, S // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, Dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

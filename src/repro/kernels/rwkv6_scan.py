@@ -1,0 +1,106 @@
+"""Chunked RWKV6 (WKV) recurrence as a Pallas kernel.
+
+The recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T ;
+               y_t = r_t^T (S_t-1 + diag(u) k_t v_t^T)
+is sequential, which maps terribly onto the MXU if done step-by-step.
+TPU adaptation: the CHUNKED-PARALLEL form (same math) — within a chunk of
+C steps the interaction is a strictly-lower-triangular (C x C) matmul with
+per-channel cumulative decay, plus a rank-C state update; across chunks a
+(dk x dv) f32 state carried in VMEM scratch.
+
+Grid (B*H, n_chunks): heads parallel, chunks sequential.  Chunk 32 keeps
+the in-chunk cumulative log-decay within fp32 exp range for realistic
+decay magnitudes (see models.rwkv6.wkv6_chunked — the jnp twin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, state_ref, y_ref, s_s, *,
+            chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        s_s[...] = state_ref[0]
+
+    rr = r_ref[0].astype(jnp.float32)                  # (C, dk)
+    kk = k_ref[0].astype(jnp.float32)
+    vv = v_ref[0].astype(jnp.float32)                  # (C, dv)
+    ww = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                   # (dk,)
+    C = chunk
+
+    lw = jnp.log(jnp.maximum(ww, 1e-38))
+    la = jnp.cumsum(lw, axis=0)                        # prod_{<=t}
+    la_prev = la - lw                                  # prod_{<t}
+    r_hat = rr * jnp.exp(la_prev)
+    k_hat = kk * jnp.exp(-la)
+    scores = jax.lax.dot_general(r_hat, k_hat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    tri = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])
+    inner = jax.lax.dot_general(jnp.where(tri, scores, 0.0), vv,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    diag = ((rr * u) * kk).sum(-1, keepdims=True) * vv
+    cross = jax.lax.dot_general(r_hat, s_s[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0] = inner + diag + cross
+
+    decay_all = jnp.exp(la[-1])                        # (dk,)
+    k_tail = kk * jnp.exp(la[-1][None, :] - la)        # (C, dk)
+    s_s[...] = (decay_all[:, None] * s_s[...]
+                + jax.lax.dot_general(k_tail, vv, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_batched(r, k, v, w, u, state, *, chunk: int = 32,
+                 interpret: bool = True):
+    """Batched heads.  r,k,w: (BH, T, dk); v: (BH, T, dv); u: (BH, dk);
+    state: (BH, dk, dv) f32.  Returns y (BH, T, dv) f32."""
+    BH, T, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(BH, T // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, dk), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, j: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, dv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+
+
+def wkv6(r, k, v, w, u, state, *, chunk: int = 32, interpret: bool = True):
+    """Single-head convenience twin of models.rwkv6.wkv6_chunked:
+    r,k,w: (T, dk); v: (T, dv); u: (dk,); state: (dk, dv).
+    Returns (y (T, dv), final_state) — final state recomputed in jnp
+    (cheap) since the kernel only emits y."""
+    y = wkv6_batched(r[None], k[None], v[None], w[None], u[None],
+                     state[None].astype(jnp.float32), chunk=chunk,
+                     interpret=interpret)[0]
+    # final state via the same cumulative form (vectorized, exact)
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+    la = jnp.cumsum(lw, axis=0)
+    decay_all = jnp.exp(la[-1])
+    k_tail = k.astype(jnp.float32) * jnp.exp(la[-1][None] - la)
+    final = (decay_all[:, None] * state.astype(jnp.float32)
+             + k_tail.T @ v.astype(jnp.float32))
+    return y.astype(r.dtype), final

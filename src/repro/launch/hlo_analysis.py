@@ -1,0 +1,289 @@
+"""Post-SPMD HLO analysis: FLOPs, HBM bytes and collective bytes with
+while-loop trip-count attribution.
+
+``compiled.cost_analysis()`` is unusable for scanned models: it counts a
+while body ONCE, so a 61-layer scan under-counts 61x (and grad-accum
+another Mx).  We parse ``compiled.as_text()`` instead:
+
+  * computations are parsed into a call graph (while bodies/conditions,
+    fusions, calls); a while's trip count is recovered from the largest
+    integer constant in its condition computation;
+  * FLOPs: every ``dot`` op contributes 2 * prod(output dims) *
+    prod(lhs contracting dims) (batch dims excluded automatically since
+    they appear in the output), multiplied by the loop multiplier.
+    Elementwise FLOPs are ignored (MXU dominates by orders of magnitude);
+  * HBM bytes: operands + outputs of top-level ops (fusion boundaries =
+    materialization boundaries after XLA fusion; fusion-internal ops are
+    skipped) — the standard post-fusion traffic model;
+  * collective bytes: operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (async ``-start``
+    counted, ``-done`` skipped).
+
+All shapes in the partitioned module are PER-DEVICE; totals are returned
+per-device and converted to global by the caller (x chips) so the
+roofline formulas of the spec apply unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^=]*?\)|\S+)\s+(" + "|".join(COLLECTIVE_OPS)
+    + r")(-start)?\(")
+_OP_RE = re.compile(r"=\s+(?:\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_DOT_RE = re.compile(r"=\s+\S+\s+dot\(")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+# top-level op kinds whose operands+outputs count as HBM traffic
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "copy", "copy-start",
+    "all-gather", "all-gather-start", "all-reduce", "all-reduce-start",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "collective-permute-start", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "reduce", "sort", "transpose", "concatenate",
+    "slice", "pad", "broadcast", "iota", "rng", "cholesky",
+    "triangular-solve", "custom-call", "select-and-scatter", "reverse",
+    "reduce-window",
+}
+
+
+def _shape_list(text: str):
+    return [( _DTYPE_BYTES[dt], [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(text)]
+
+
+def _nbytes(entry) -> int:
+    b, dims = entry
+    n = 1
+    for d in dims:
+        n *= d
+    return n * b
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    while_pairs: list = dataclasses.field(default_factory=list)
+    fusion_calls: list = dataclasses.field(default_factory=list)
+    other_calls: list = dataclasses.field(default_factory=list)
+    constants: list = dataclasses.field(default_factory=list)
+
+
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _first_group(rhs: str) -> str:
+    """Text of the op's argument list (up to the matching close paren)."""
+    depth, out = 1, []
+    for ch in rhs:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out.append(ch)
+    return "".join(out)
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    shapes: dict[str, list] = {}          # op name -> shape entries (local)
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        hm = _HEADER_RE.match(line)
+        if hm and line.endswith("{"):
+            name = hm.group(1)
+            cur = Computation(name, is_entry=line.startswith("ENTRY"))
+            comps[name] = cur
+            shapes = {}
+            continue
+        if cur is None or not line or line.startswith("}"):
+            continue
+        nm = _NAME_RE.match(line)
+        if not nm:
+            continue
+        op_name = nm.group(1)
+        after_eq = line[nm.end():].strip()
+        if after_eq.startswith("("):          # tuple-typed output
+            depth = 0
+            close = 0
+            for i, ch in enumerate(after_eq):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        close = i
+                        break
+            type_str, rest = after_eq[:close + 1], after_eq[close + 1:]
+        else:
+            type_str, _, rest = after_eq.partition(" ")
+        out_shapes = _shape_list(type_str)
+        shapes[op_name] = out_shapes
+        rest = rest.strip()
+        op, _, rhs = rest.partition("(")
+        op = op.strip().split()[-1] if op.strip() else ""
+        args = _first_group(rhs)
+        operand_names = _OPERAND_RE.findall(args)
+        opnd_shapes = [s for n in operand_names for s in shapes.get(n, [])]
+        if not opnd_shapes:
+            opnd_shapes = _shape_list(args)   # older dialect: inline types
+
+        # ---- collectives
+        cm = _COLL_RE.search(line)
+        if cm and not op.endswith("-done"):
+            kind = cm.group(1)
+            b = sum(_nbytes(s) for s in (opnd_shapes or out_shapes))
+            cur.coll_bytes[kind] = cur.coll_bytes.get(kind, 0) + b
+            cur.coll_counts[kind] = cur.coll_counts.get(kind, 0) + 1
+        # ---- flops: dot = 2 * prod(out) * prod(lhs contracting dims)
+        if op == "dot" and out_shapes and opnd_shapes:
+            lhs_shape = opnd_shapes[0]
+            m = _LHS_CONTRACT_RE.search(line)
+            contract = 1
+            if m and m.group(1):
+                for idx in m.group(1).split(","):
+                    d = int(idx)
+                    if d < len(lhs_shape[1]):
+                        contract *= lhs_shape[1][d]
+            out_elems = 1
+            for d in out_shapes[0][1]:
+                out_elems *= d
+            cur.flops += 2.0 * out_elems * contract
+        # ---- calls
+        if op == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", line)
+            cond = re.search(r"condition=%?([\w\.\-]+)", line)
+            if body and cond:
+                cur.while_pairs.append((body.group(1), cond.group(1)))
+        elif op == "fusion":
+            m = re.search(r"calls=%?([\w\.\-]+)", line)
+            if m:
+                cur.fusion_calls.append(m.group(1))
+        else:
+            for key in ("to_apply", "calls"):
+                m = re.search(key + r"=%?([\w\.\-]+)", line)
+                if m:
+                    cur.other_calls.append(m.group(1))
+        # ---- HBM traffic (top-level materialization boundaries)
+        if op in _MEM_OPS:
+            out_b = sum(_nbytes(s) for s in out_shapes)
+            opnd_b = [_nbytes(s) for s in opnd_shapes]
+            if "dynamic-update-slice" in op_name \
+                    or op == "dynamic-update-slice":
+                # in-place update: traffic = 2 x update region (the full
+                # aliased buffer is NOT streamed) — the updates are the
+                # non-largest operands
+                small = sorted(opnd_b)[:-1] if opnd_b else []
+                cur.mem_bytes += 2 * sum(small)
+            elif op in ("dynamic-slice", "gather") \
+                    or "dynamic-slice" in op_name or "gather" in op_name:
+                # sliced/gathered read: only the slice streams from HBM
+                cur.mem_bytes += 2 * out_b
+            else:
+                cur.mem_bytes += out_b + sum(opnd_b)
+        for c in re.findall(r"constant\((\d+)\)", line):
+            cur.constants.append(int(c))
+    return comps
+
+
+def _trip_count(cond: Optional[Computation]) -> int:
+    """Trip count heuristic: largest integer constant in the condition."""
+    if cond is None:
+        return 1
+    return max(cond.constants, default=1)
+
+
+@dataclasses.dataclass
+class HloSummary:
+    flops: float = 0.0              # per-device
+    mem_bytes: float = 0.0          # per-device
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+
+def analyze(hlo: str) -> HloSummary:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None and comps:
+        entry = list(comps.values())[0]
+    out = HloSummary()
+
+    def visit(c: Computation, mult: float, in_fusion: bool):
+        out.flops += c.flops * mult
+        if not in_fusion:
+            out.mem_bytes += c.mem_bytes * mult
+        for kind, b in c.coll_bytes.items():
+            out.coll_bytes[kind] = out.coll_bytes.get(kind, 0.0) + b * mult
+            out.coll_counts[kind] = (out.coll_counts.get(kind, 0)
+                                     + int(c.coll_counts[kind] * mult))
+        for body_name, cond_name in c.while_pairs:
+            body = comps.get(body_name)
+            tc = _trip_count(comps.get(cond_name))
+            if body:
+                visit(body, mult * tc, in_fusion)
+        for callee in c.fusion_calls:
+            sub = comps.get(callee)
+            if sub:
+                visit(sub, mult, True)
+        for callee in c.other_calls:
+            sub = comps.get(callee)
+            if sub:
+                visit(sub, mult, in_fusion)
+
+    if entry:
+        visit(entry, 1.0, False)
+    return out
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Back-compat wrapper: {kind: bytes, "_counts": {...}} per device."""
+    s = analyze(hlo)
+    d = dict(s.coll_bytes)
+    d["_counts"] = dict(s.coll_counts)
+    return d
+
+
+# --------------------------------------------------------------- roofline
+def roofline_terms(flops: float, bytes_hbm: float, coll_bytes_total: float,
+                   *, chips: int, peak_flops: float, hbm_bw: float,
+                   ici_bw: float) -> dict:
+    """The three roofline terms in seconds (global work / global capacity)."""
+    return {
+        "t_compute": flops / (chips * peak_flops),
+        "t_memory": bytes_hbm / (chips * hbm_bw),
+        "t_collective": coll_bytes_total / (chips * ici_bw),
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    return max(("t_compute", "t_memory", "t_collective"),
+               key=lambda k: terms[k])

@@ -1,0 +1,243 @@
+"""Step builders: train_step / prefill_step / serve_step per architecture,
+with explicit NamedShardings for every input (params, optimizer state,
+batch, decode caches).
+
+These are the functions the dry-run lowers and the real launcher executes;
+the rDLB runtime (repro.runtime.executor) drives the same train_step at
+grad-chunk granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioner import (AxisRules, Partitioner,
+                                           make_rules, set_partitioner)
+from repro.models import build_model
+from repro.models.common import abstract_params, spec_logical_axes
+from repro.models.config import ModelConfig
+from repro.optim import (apply_updates, clip_by_global_norm, make_optimizer)
+
+
+def make_partitioner(cfg: ModelConfig, mesh) -> Partitioner:
+    mode = getattr(cfg, "parallelism", "tp")
+    if mode == "dp":
+        # DP-heavy preset (§Perf): batch over data AND model axes, params
+        # ZeRO-sharded over data; no tensor parallelism.  Right for small
+        # models whose TP all-reduce volume dwarfs their compute.
+        # REQUIRES microbatch rows divisible by the full DP degree.
+        overrides = {
+            "batch": ("pod", "data", "model"),
+            "embed": ("data", "model"),     # ZeRO over BOTH axes (256-way)
+            "heads": None, "kv_heads": None, "mlp": None,
+            "vocab": None, "expert": None, "cache_seq": "model",
+        }
+        return Partitioner(mesh, AxisRules(
+            make_rules(fsdp=True, overrides=overrides)))
+    if mode == "dp_data":
+        # data-axis-only DP + ZeRO params (no TP): for models too large to
+        # fit replicated yet too small to benefit from 16-way TP, when the
+        # microbatch cannot cover the full device count (qwen2-72b §Perf).
+        overrides = {
+            "heads": None, "kv_heads": None, "mlp": None,
+            "vocab": None, "expert": None, "cache_seq": "model",
+        }
+        return Partitioner(mesh, AxisRules(
+            make_rules(fsdp=True, overrides=overrides)))
+    return Partitioner(mesh, AxisRules(make_rules(fsdp=cfg.fsdp)))
+
+
+def tree_shardings(axes_tree, abstract_tree, part: Partitioner):
+    """Map a pytree of logical-axes tuples + abstract leaves to shardings."""
+    return jax.tree_util.tree_map(
+        lambda ax, leaf: part.sharding(ax, leaf.shape),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: (isinstance(x, tuple)
+                           and all(isinstance(a, (str, type(None)))
+                                   for a in x)))
+
+
+def param_shardings(model, part: Partitioner):
+    specs = model.param_specs()
+    axes = spec_logical_axes(specs)
+    return tree_shardings(axes, abstract_params(specs), part)
+
+
+def opt_state_shardings(opt_name: str, model, part: Partitioner):
+    """Optimizer moments inherit the parameter sharding (ZeRO-1 minimum).
+
+    adamw: mu/nu shaped like params.  adafactor: vr drops the last dim,
+    vc drops the second-to-last.  step: replicated scalar.
+    """
+    specs = model.param_specs()
+    axes = spec_logical_axes(specs)
+    rep = part.sharding((), ())
+
+    def leaf_shard(ax, spec):
+        return part.sharding(ax, spec.shape)
+
+    flat_axes = jax.tree_util.tree_leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_specs = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda s: hasattr(s, "logical_axes"))
+    treedef = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda s: hasattr(s, "logical_axes"))
+
+    if opt_name == "adamw":
+        like = treedef.unflatten(
+            [leaf_shard(a, s) for a, s in zip(flat_axes, flat_specs)])
+        return {"mu": like, "nu": like, "step": rep}
+
+    def factored(s):
+        return len(s.shape) >= 2 and s.shape[-1] > 1 and s.shape[-2] > 1
+
+    def af_leaf(ax, s):
+        if factored(s):
+            return {"vr": part.sharding(ax[:-1], s.shape[:-1]),
+                    "vc": part.sharding(ax[:-2] + ax[-1:],
+                                        s.shape[:-2] + s.shape[-1:])}
+        return {"v": part.sharding(ax, s.shape)}
+
+    v = treedef.unflatten(
+        [af_leaf(a, s) for a, s in zip(flat_axes, flat_specs)])
+    return {"v": v, "step": rep}
+
+
+def batch_shardings(batch_specs: dict, part: Partitioner) -> dict:
+    out = {}
+    for k, v in batch_specs.items():
+        ax = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = part.sharding(ax, v.shape)
+    return out
+
+
+# =================================================================== train
+@dataclasses.dataclass(frozen=True)
+class TrainStep:
+    model: Any
+    step_fn: Any                 # (params, opt_state, batch) -> (...)
+    param_sharding: Any
+    opt_sharding: Any
+    opt: Any
+    partitioner: Any
+
+    def jit(self, batch_specs, donate=True):
+        bs = batch_shardings(batch_specs, self.partitioner)
+        return jax.jit(
+            self.step_fn,
+            in_shardings=(self.param_sharding, self.opt_sharding, bs),
+            out_shardings=(self.param_sharding, self.opt_sharding, None),
+            donate_argnums=(0, 1) if donate else ())
+
+
+def make_train_step(cfg: ModelConfig, mesh, *, num_microbatches: int = 1,
+                    optimizer: str = "adamw", lr: float = 1e-4,
+                    accum_dtype=None, grad_clip: float = 1.0) -> TrainStep:
+    model = build_model(cfg)
+    opt = make_optimizer(optimizer, lr=lr)
+    part = make_partitioner(cfg, mesh)
+    M = num_microbatches
+    acc_dt = accum_dtype or (jnp.bfloat16 if cfg.name.startswith(
+        "deepseek-v3") else jnp.float32)
+
+    def loss_fn(params, ubatch):
+        loss, metrics = model.loss(params, ubatch)
+        return loss, metrics
+
+    def step_fn(params, opt_state, batch):
+        with set_partitioner(part):
+            if M == 1:
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                ub = jax.tree_util.tree_map(
+                    lambda t: t.reshape((M, t.shape[0] // M) + t.shape[1:]),
+                    batch)
+
+                def micro(carry, u):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, u)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, acc_dt), params)
+                (grads, loss), _ = jax.lax.scan(
+                    micro, (g0, jnp.float32(0.0)), ub)
+                grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+                loss = loss / M
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return TrainStep(model, step_fn, param_shardings(model, part),
+                     opt_state_shardings(optimizer, model, part), opt, part)
+
+
+# =================================================================== serve
+@dataclasses.dataclass(frozen=True)
+class ServeStep:
+    model: Any
+    prefill_fn: Any              # (params, batch) -> last-token logits
+    decode_fn: Any               # (params, cache, tokens, pos) -> (tok, cache)
+    param_sharding: Any
+    partitioner: Any
+
+    def cache_shardings(self, cache_abstract):
+        return tree_shardings(self.model.cache_axes(), cache_abstract,
+                              self.partitioner)
+
+    def jit_prefill(self, batch_specs):
+        bs = batch_shardings(batch_specs, self.partitioner)
+        return jax.jit(self.prefill_fn,
+                       in_shardings=(self.param_sharding, bs))
+
+    def jit_decode(self, cache_abstract, donate=True):
+        cs = self.cache_shardings(cache_abstract)
+        return jax.jit(
+            self.decode_fn,
+            in_shardings=(self.param_sharding, cs, None, None),
+            out_shardings=(None, cs),
+            donate_argnums=(1,) if donate else ())
+
+
+def make_serve_step(cfg: ModelConfig, mesh) -> ServeStep:
+    model = build_model(cfg)
+    part = make_partitioner(cfg, mesh)
+
+    def prefill_fn(params, batch):
+        with set_partitioner(part):
+            if cfg.family == "encdec":
+                logits = model.forward(params, batch["tokens"],
+                                       batch["frames"], last_only=True)
+            elif cfg.family == "vlm":
+                logits, _, _ = model.forward(params, batch["tokens"],
+                                             batch.get("patches"),
+                                             last_only=True)
+            elif cfg.family in ("rwkv",):
+                logits, _ = model.forward(params, batch["tokens"],
+                                          last_only=True)
+            elif cfg.family == "hybrid":
+                logits = model.forward(params, batch["tokens"],
+                                       last_only=True)
+            else:
+                logits, _, _ = model.forward(params, batch["tokens"],
+                                             last_only=True)
+        return logits
+
+    def decode_fn(params, cache, tokens, pos):
+        with set_partitioner(part):
+            logits, cache = model.decode_step(params, cache, tokens, pos)
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return next_tok.astype(jnp.int32), cache
+
+    return ServeStep(model, prefill_fn, decode_fn,
+                     param_shardings(model, part), part)

@@ -1,0 +1,196 @@
+"""Shared model substrate: parameter specs, inits, norms, RoPE, losses.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every leaf is
+described by a :class:`ParamSpec` carrying shape, dtype, init and *logical*
+sharding axes; ``repro.distributed`` resolves those to physical shardings.
+``jax.eval_shape``-friendly: ``abstract_params`` builds ShapeDtypeStructs so
+the dry-run never allocates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioner import logical_constraint
+
+Params = Any  # nested dict pytree of arrays
+Specs = Any   # same structure, ParamSpec leaves
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical_axes: tuple           # len == len(shape); names or None
+    init: str = "normal"          # normal | zeros | ones | embed
+    dtype: Any = jnp.bfloat16
+    init_scale: float = 1.0       # multiplies the fan-in normal std
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), \
+            f"shape {self.shape} vs axes {self.logical_axes}"
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            std = 1.0
+        else:
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            std = self.init_scale / math.sqrt(max(1, fan_in))
+        return (std * jax.random.normal(key, self.shape, jnp.float32)
+                ).astype(self.dtype)
+
+
+def init_params(specs: Specs, key: jax.Array) -> Params:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs: Specs) -> Params:
+    return jax.tree_util.tree_map(
+        lambda s: s.abstract(), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_logical_axes(specs: Specs) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: s.logical_axes, specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(specs: Specs) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: Optional[jax.Array],
+             eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: Optional[jax.Array] = None,
+               bias: Optional[jax.Array] = None,
+               eps: float = 1e-5) -> jax.Array:
+    """LayerNorm; with scale=bias=None this is OLMo's non-parametric LN."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    if x.ndim == angles.ndim + 1:                       # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- dense
+def dense_specs(d_in: int, d_out: int, axes: tuple,
+                *, bias: bool = False, dtype=jnp.bfloat16,
+                init_scale: float = 1.0) -> dict:
+    s = {"kernel": ParamSpec((d_in, d_out), axes, dtype=dtype,
+                             init_scale=init_scale)}
+    if bias:
+        s["bias"] = ParamSpec((d_out,), (axes[1],), init="zeros", dtype=dtype)
+    return s
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["kernel"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+# -------------------------------------------------------------------- loss
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy; logits (..., V) fp32-stable."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    return logical_constraint(x, axes)
+
+
+# ---------------------------------------------------- stacked layer helpers
+def stack_specs(layer_specs: Specs, n_layers: int) -> Specs:
+    """Prepend a ("layers",) stacking axis to every leaf spec."""
+    def bump(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n_layers,) + s.shape, ("layers",) + s.logical_axes,
+                         init=s.init, dtype=s.dtype, init_scale=s.init_scale)
+    return jax.tree_util.tree_map(
+        bump, layer_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def scan_layers(body: Callable, params: Params, x, *,
+                n_layers: int, remat_policy: str = "nothing_saveable",
+                unroll: int = 1, carry_extra=None):
+    """jax.lax.scan over stacked layer params with rematerialization.
+
+    ``body(layer_params, x, extra) -> (x, extra)``; extra is scanned carry
+    state (e.g. decode caches are handled outside, this is for train/prefill).
+    """
+    policy = {
+        "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+        "dots_saveable": jax.checkpoint_policies.dots_saveable,
+        "dots_with_no_batch_dims_saveable":
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "everything_saveable": jax.checkpoint_policies.everything_saveable,
+    }[remat_policy]
+
+    def step(carry, layer_params):
+        h, extra = carry
+        h, extra = body(layer_params, h, extra)
+        return (h, extra), None
+
+    step = jax.checkpoint(step, policy=policy, prevent_cse=False)
+    (x, carry_extra), _ = jax.lax.scan(
+        step, (x, carry_extra), params, length=n_layers, unroll=unroll)
+    return x, carry_extra

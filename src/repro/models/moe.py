@@ -1,0 +1,142 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2/V3 family).
+
+shared experts:  always-on dense FFN(s) (deepseek: 1 (v3) / 2 (v2-lite)).
+routed experts:  top-k of E, dispatched with the GShard einsum formulation —
+                 one-hot dispatch/combine tensors, capacity-bounded per
+                 *group* (a group = one batch row, so the dispatch tensor is
+                 (G, Tg, E, C) and never O(T^2)) — no scatter/gather, maps
+                 onto the MXU, shards cleanly over the "expert" (model) mesh
+                 axis.  The baseline dry-run uses this all_to_all-free form;
+                 the §Perf hillclimb explores alternatives.
+
+Router: softmax gating with top-k renormalization + the standard load-balance
+auxiliary loss (coef cfg.router_aux_coef).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, constrain
+from repro.models.config import ModelConfig
+
+
+def ffn_specs(d_model: int, d_ff: int, act: str, dt,
+              axes=("embed", "mlp")) -> dict:
+    s = {
+        "up": ParamSpec((d_model, d_ff), axes, dtype=dt),
+        "down": ParamSpec((d_ff, d_model), (axes[1], axes[0]), dtype=dt),
+    }
+    if act in ("silu", "gelu"):          # gated (swiglu / geglu)
+        s["gate"] = ParamSpec((d_model, d_ff), axes, dtype=dt)
+    return s
+
+
+def ffn_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["up"]
+    if "gate" in p:
+        g = x @ p["gate"]
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        h = g * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["down"]
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_routed_experts, cfg.d_expert
+    dt = cfg.param_dtype
+    s: dict = {
+        "router": ParamSpec((d, e), ("embed", "expert"), dtype=jnp.float32),
+        "experts": {
+            "gate": ParamSpec((e, d, f), ("expert", "embed", "expert_mlp"),
+                              dtype=dt),
+            "up": ParamSpec((e, d, f), ("expert", "embed", "expert_mlp"),
+                            dtype=dt),
+            "down": ParamSpec((e, f, d), ("expert", "expert_mlp", "embed"),
+                              dtype=dt),
+        },
+    }
+    if cfg.n_shared_experts > 0:
+        s["shared"] = ffn_specs(d, cfg.d_expert * cfg.n_shared_experts,
+                                cfg.act, dt)
+    return s
+
+
+def _route(logits: jnp.ndarray, K: int, E: int, aux_coef: float):
+    """Per-group routing: logits (Tg, E) -> (gates (Tg,K), idx (Tg,K), aux)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                 # (Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = aux_coef * E * jnp.sum(me * ce)
+    return gate_vals, idx, aux
+
+
+def _dispatch_combine(idx, gate_vals, E: int, C: int, dtype):
+    """One-hot dispatch (Tg,E,C) and combine (Tg,E,C) tensors for a group."""
+    Tg, K = idx.shape
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.int32)            # (Tg, K, E)
+    pos_in_e = (jnp.cumsum(sel.reshape(Tg * K, E), axis=0)
+                .reshape(Tg, K, E) - 1)                      # queue position
+    keep = (pos_in_e < C) & (sel > 0)
+    slot = jnp.where(keep, pos_in_e, 0).max(axis=-1)         # (Tg, K)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=dtype)           # (Tg, K, C)
+    disp = jnp.einsum("tke,tkc->tec", keep.astype(dtype), slot_oh)
+    comb = jnp.einsum("tec,tk->tec", disp,
+                      gate_vals.astype(dtype))               # gated combine
+    return disp, comb
+
+
+def _group_size(T: int, target: int = 512) -> int:
+    """Largest divisor of T that is <= target (token-group size).
+
+    The dispatch tensor is (G, g, E, C) with C = cap*K*g/E, so its total
+    size is 2*cap*K*T*g bytes — *linear in g*.  Small groups keep it cheap;
+    g must still be large enough that C >= a few slots per expert.
+    """
+    g = min(target, T)
+    while T % g:
+        g -= 1
+    return g
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array):
+    """x: (B, S, D) -> (out, aux_loss).  Groups = fixed-size token chunks."""
+    B, S, D = x.shape
+    E, K = cfg.n_routed_experts, cfg.top_k
+    T = B * S
+    g = _group_size(T, getattr(cfg, "moe_group_size", 512))
+    G = T // g
+    C = max(1, int(cfg.capacity_factor * K * g / E))
+    dt = x.dtype
+    xg = x.reshape(G, g, D)
+
+    logits = xg.astype(jnp.float32) @ p["router"]            # (G, g, E)
+    gate_vals, idx, aux = jax.vmap(
+        lambda lg: _route(lg, K, E, cfg.router_aux_coef))(logits)
+    disp, comb = jax.vmap(
+        lambda i, gv: _dispatch_combine(i, gv, E, C, dt))(idx, gate_vals)
+
+    # dispatch tokens: (G, t, E, C) x (G, t, D) -> (E, G*C, D)
+    ex_in = jnp.einsum("gtec,gtd->gecd", disp, xg)
+    ex_in = ex_in.transpose(1, 0, 2, 3).reshape(E, G * C, D)
+    ex_in = constrain(ex_in, ("expert", "batch", "embed"))
+
+    w = p["experts"]
+    gate_h = jnp.einsum("ecd,edf->ecf", ex_in, w["gate"])
+    up_h = jnp.einsum("ecd,edf->ecf", ex_in, w["up"])
+    h = (jax.nn.silu(gate_h) if cfg.act == "silu"
+         else jax.nn.gelu(gate_h)) * up_h
+    ex_out = jnp.einsum("ecf,efd->ecd", h, w["down"])
+    ex_out = constrain(ex_out, ("expert", "batch", "embed"))
+    ex_out = ex_out.reshape(E, G, C, D).transpose(1, 0, 2, 3)  # (G,E,C,D)
+
+    out = jnp.einsum("gtec,gecd->gtd", comb, ex_out).reshape(B, S, D)
+    if "shared" in p:
+        out = out + ffn_apply(p["shared"], x, cfg.act)
+    return out.astype(dt), jnp.mean(aux)

@@ -1,0 +1,23 @@
+"""Model registry: ModelConfig.family -> model class."""
+
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+
+MODEL_FAMILIES = ("dense", "moe", "vlm", "encdec", "rwkv", "hybrid")
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import TransformerModel
+        return TransformerModel(cfg)
+    if cfg.family == "encdec":
+        from repro.models.whisper import WhisperModel
+        return WhisperModel(cfg)
+    if cfg.family == "rwkv":
+        from repro.models.rwkv6 import RWKV6Model
+        return RWKV6Model(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.ssm import HymbaModel
+        return HymbaModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,263 @@
+"""Selective SSM (Mamba-style) head + the Hymba hybrid architecture.
+
+hymba-1.5b (arXiv:2411.13676): each layer runs ATTENTION HEADS and MAMBA
+HEADS **in parallel** on the same input; branch outputs are RMS-normalized,
+scaled by learned per-channel betas, averaged, and projected.  128 learnable
+meta tokens are prepended to the sequence; all layers use sliding-window
+attention except three global layers (first / middle / last).  ssm_state=16.
+
+Simplifications vs. the full paper (recorded in DESIGN.md §Arch-applicability):
+cross-layer KV sharing is not implemented; the SSM branch is a standard
+Mamba-1 selective scan (conv4 + silu + data-dependent dt/B/C).
+
+Layers are UNROLLED (no scan-over-layers): the three global layers carry
+full-length KV caches while SWA layers carry window-sized rolling caches —
+the heterogeneity that makes hymba's long_500k cell feasible (cache memory
+O(3*S + 29*W) instead of O(32*S)).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ParamSpec, abstract_params, constrain,
+                                 dense, dense_specs, init_params, rms_norm,
+                                 softmax_xent)
+from repro.models.config import ModelConfig
+from repro.models.moe import ffn_apply, ffn_specs
+
+
+# ----------------------------------------------------------- mamba head
+def mamba_specs(cfg: ModelConfig, d_inner: int) -> dict:
+    d = cfg.d_model
+    n = cfg.ssm_state
+    dt_rank = max(1, math.ceil(d / 16))
+    dtp = cfg.param_dtype
+    return {
+        "in_x": dense_specs(d, d_inner, ("embed", "mlp"), dtype=dtp),
+        "in_z": dense_specs(d, d_inner, ("embed", "mlp"), dtype=dtp),
+        "conv": ParamSpec((cfg.ssm_conv, d_inner), ("conv", "mlp"),
+                          dtype=dtp),
+        "conv_b": ParamSpec((d_inner,), ("mlp",), init="zeros", dtype=dtp),
+        "dt_a": dense_specs(d_inner, dt_rank, ("mlp", None), dtype=dtp),
+        "dt_b": dense_specs(dt_rank, d_inner, (None, "mlp"), bias=True,
+                            dtype=dtp),
+        "bc": dense_specs(d_inner, 2 * n, ("mlp", None), dtype=dtp),
+        "a_log": ParamSpec((d_inner, n), ("mlp", "state"), init="zeros",
+                           dtype=jnp.float32),
+        "d_skip": ParamSpec((d_inner,), ("mlp",), init="ones",
+                            dtype=jnp.float32),
+        "out": dense_specs(d_inner, d, ("mlp", "embed"), dtype=dtp),
+    }
+
+
+def _causal_conv(x, kernel, bias, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv over seq.  x: (B,S,Di); kernel: (K,Di);
+    tail: (B,K-1,Di) previous inputs for decode streaming."""
+    K = kernel.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, S+K-1, Di)
+    out = sum(xp[:, i:i + x.shape[1], :] * kernel[i]
+              for i in range(K))
+    return out + bias, xp[:, -(K - 1):, :]
+
+
+def mamba_apply(p, cfg: ModelConfig, x, ssm_state, conv_tail):
+    """x: (B,S,D); ssm_state: (B,Di,N) fp32; conv_tail: (B,K-1,Di)."""
+    B, S, _ = x.shape
+    n = cfg.ssm_state
+    xx = dense(p["in_x"], x)
+    z = dense(p["in_z"], x)
+    xx, conv_tail = _causal_conv(xx, p["conv"], p["conv_b"], conv_tail)
+    xx = jax.nn.silu(xx)                                  # (B,S,Di)
+    dt = jax.nn.softplus(dense(p["dt_b"], dense(p["dt_a"], xx))
+                         ).astype(jnp.float32)            # (B,S,Di)
+    bc = dense(p["bc"], xx).astype(jnp.float32)
+    Bm, Cm = bc[..., :n], bc[..., n:]                     # (B,S,N)
+    A = -jnp.exp(p["a_log"])                              # (Di,N) negative
+
+    def scan_t(h, inp):
+        dt_t, b_t, c_t, x_t = inp                         # (B,Di),(B,N)...
+        dA = jnp.exp(dt_t[..., None] * A)                 # (B,Di,N)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]   # (B,Di,N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), xx.astype(jnp.float32).transpose(1, 0, 2))
+    ssm_state, ys = jax.lax.scan(scan_t, ssm_state, xs)
+    y = ys.transpose(1, 0, 2)                             # (B,S,Di)
+    y = y + xx.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return dense(p["out"], y), ssm_state, conv_tail
+
+
+# ------------------------------------------------------------- hymba
+class HymbaModel:
+    """Hybrid attention+SSM heads, meta tokens, SWA + 3 global layers."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.d_inner = int(cfg.ssm_expand * cfg.d_model)
+        g = cfg.global_layers or (0, cfg.n_layers // 2, cfg.n_layers - 1)
+        self.global_layers = set(g)
+
+    def _layer_specs(self) -> dict:
+        cfg = self.cfg
+        dtp = cfg.param_dtype
+        return {
+            "norm": ParamSpec((cfg.d_model,), ("embed",), init="ones",
+                              dtype=dtp),
+            "attn": attn.gqa_specs(cfg),
+            "mamba": mamba_specs(cfg, self.d_inner),
+            "beta_attn": ParamSpec((cfg.d_model,), ("embed",), init="ones",
+                                   dtype=dtp),
+            "beta_ssm": ParamSpec((cfg.d_model,), ("embed",), init="ones",
+                                  dtype=dtp),
+            "norm_ffn": ParamSpec((cfg.d_model,), ("embed",), init="ones",
+                                  dtype=dtp),
+            "ffn": ffn_specs(cfg.d_model, cfg.d_ff, cfg.act, dtp),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        dtp = cfg.param_dtype
+        s = {
+            "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), init="embed", dtype=dtp),
+            "meta": ParamSpec((cfg.n_meta_tokens, cfg.d_model),
+                              (None, "embed"), init="embed", dtype=dtp),
+            "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="ones",
+                                    dtype=dtp),
+            "head": ParamSpec((cfg.d_model, cfg.vocab_size),
+                              ("embed", "vocab"), dtype=dtp),
+        }
+        for i in range(cfg.n_layers):
+            s[f"layer_{i}"] = self._layer_specs()
+        return s
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    def _window(self, i: int) -> int:
+        return 0 if i in self.global_layers else self.cfg.sliding_window
+
+    def _block(self, p, x, positions, i, *, decode=False, cache=None,
+               pos=None):
+        cfg = self.cfg
+        xn = rms_norm(x, p["norm"])
+        if decode:
+            a_out, cache["attn"] = attn.gqa_decode(
+                p["attn"], cfg, xn, cache["attn"], pos,
+                window=self._window(i))
+            m_out, cache["ssm"], cache["conv"] = mamba_apply(
+                p["mamba"], cfg, xn, cache["ssm"], cache["conv"])
+        else:
+            a_out = attn.gqa_forward(p["attn"], cfg, xn, positions,
+                                     window=self._window(i))
+            B = x.shape[0]
+            ssm0 = jnp.zeros((B, self.d_inner, cfg.ssm_state), jnp.float32)
+            m_out, _, _ = mamba_apply(p["mamba"], cfg, xn, ssm0, None)
+        fused = 0.5 * (rms_norm(a_out, None) * p["beta_attn"]
+                       + rms_norm(m_out, None) * p["beta_ssm"])
+        x = x + fused.astype(x.dtype)
+        x = x + ffn_apply(p["ffn"], rms_norm(x, p["norm_ffn"]), cfg.act)
+        return constrain(x, ("batch", "seq", "embed")), cache
+
+    def forward(self, params, tokens, *, last_only=False):
+        cfg = self.cfg
+        B, S = tokens.shape
+        M = cfg.n_meta_tokens
+        x = jnp.take(params["embed"], tokens, axis=0)
+        meta = jnp.broadcast_to(params["meta"][None], (B, M, cfg.d_model)
+                                ).astype(x.dtype)
+        x = jnp.concatenate([meta, x], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(S + M)[None], (B, S + M))
+        x = constrain(x, ("batch", "seq", "embed"))
+        for i in range(cfg.n_layers):
+            block = jax.checkpoint(
+                lambda p, h, i=i: self._block(p, h, positions, i)[0],
+                policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+            x = block(params[f"layer_{i}"], x)
+        x = rms_norm(x, params["final_norm"])
+        x = x[:, M:, :]
+        if last_only:
+            x = x[:, -1:, :]
+        logits = x @ params["head"]
+        return logits
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        return softmax_xent(logits, batch["labels"], batch.get("mask")), {}
+
+    # --------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        K = cfg.ssm_conv
+        caches = {}
+        for i in range(cfg.n_layers):
+            w = self._window(i)
+            caches[f"layer_{i}"] = {
+                "attn": attn.gqa_init_cache(
+                    cfg, batch, max_len + cfg.n_meta_tokens, window=w),
+                "ssm": jnp.zeros((batch, self.d_inner, cfg.ssm_state),
+                                 jnp.float32),
+                "conv": jnp.zeros((batch, K - 1, self.d_inner),
+                                  cfg.param_dtype),
+            }
+        return caches
+
+    def cache_axes(self):
+        per_layer = {
+            "attn": {"k": ("batch", "cache_seq", "kv_heads", None),
+                     "v": ("batch", "cache_seq", "kv_heads", None),
+                     "pos": (None,)},
+            "ssm": ("batch", "mlp", "state"),
+            "conv": ("batch", None, "mlp"),
+        }
+        return {f"layer_{i}": per_layer for i in range(self.cfg.n_layers)}
+
+    def _decode_embed(self, params, cache, x, pos_abs):
+        """One decode step from an already-embedded (B,1,D) input."""
+        cfg = self.cfg
+        x = constrain(x, ("batch", "seq", "embed"))
+        for i in range(cfg.n_layers):
+            x, cache[f"layer_{i}"] = self._block(
+                params[f"layer_{i}"], x, None, i, decode=True,
+                cache=cache[f"layer_{i}"], pos=pos_abs)
+        return x, cache
+
+    def prefill_meta(self, params, cache, batch: int):
+        """Feed the learnable meta tokens through the decode path so the
+        caches/SSM states match the forward pass's meta prefix."""
+        cfg = self.cfg
+        for i in range(cfg.n_meta_tokens):
+            x = jnp.broadcast_to(params["meta"][i][None, None],
+                                 (batch, 1, cfg.d_model)
+                                 ).astype(cfg.param_dtype)
+            _, cache = self._decode_embed(params, cache, x, jnp.int32(i))
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,1); pos = TEXT position (meta offset added here).
+        The cache must have been meta-prefilled (prefill_meta) or filled
+        by a prompt prefill for logits to match the forward pass."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x, cache = self._decode_embed(params, cache, x,
+                                      pos + cfg.n_meta_tokens)
+        x = rms_norm(x, params["final_norm"])
+        return x @ params["head"], cache

@@ -1,0 +1,316 @@
+"""Decoder-only transformer assembly: dense, MoE(+MLA) and VLM families.
+
+Covers: deepseek-v3-671b, deepseek-v2-lite-16b (MLA + shared/routed MoE,
+leading dense layers, optional MTP head), deepseek-coder-33b, qwen3-4b
+(qk-norm), olmo-1b (non-parametric LN), qwen2-72b (QKV bias),
+paligemma-3b (MQA gemma backbone + patch-embedding stub, prefix-LM mask).
+
+Layers are stacked and scanned (jax.lax.scan + jax.checkpoint remat) so the
+lowered HLO is O(1) in depth; MoE models scan two stacks (leading dense
+layers, then MoE layers).  Decode carries stacked KV caches through the same
+scans (MLA models cache the compressed c_kv / k_rope only).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ParamSpec, abstract_params, constrain,
+                                 dense, init_params, layer_norm, rms_norm,
+                                 softmax_xent, stack_specs)
+from repro.models.config import ModelConfig
+from repro.models.moe import ffn_apply, ffn_specs, moe_apply, moe_specs
+
+
+# ------------------------------------------------------------------- norms
+def norm_specs(cfg: ModelConfig) -> dict:
+    dtp = cfg.param_dtype
+    if cfg.norm == "nonparam_ln":
+        return {}
+    s = {"scale": ParamSpec((cfg.d_model,), ("embed",), init="ones",
+                            dtype=dtp)}
+    if cfg.norm == "layernorm":
+        s["bias"] = ParamSpec((cfg.d_model,), ("embed",), init="zeros",
+                              dtype=dtp)
+    return s
+
+
+def apply_norm(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return layer_norm(x, None, None)        # olmo non-parametric
+
+
+class TransformerModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_moe_layers = (cfg.n_layers - cfg.n_dense_layers
+                             if cfg.moe else 0)
+        self.n_dense_stack = (cfg.n_dense_layers if cfg.moe
+                              else cfg.n_layers)
+
+    # ------------------------------------------------------------ specs
+    def _attn_specs(self) -> dict:
+        return (attn.mla_specs(self.cfg) if self.cfg.mla
+                else attn.gqa_specs(self.cfg))
+
+    def _layer_specs(self, moe: bool) -> dict:
+        cfg = self.cfg
+        ffn = (moe_specs(cfg) if moe
+               else ffn_specs(cfg.d_model, cfg.d_ff, cfg.act,
+                              cfg.param_dtype))
+        return {"ln1": norm_specs(cfg), "attn": self._attn_specs(),
+                "ln2": norm_specs(cfg), "ffn": ffn}
+
+    def param_specs(self):
+        cfg = self.cfg
+        dtp = cfg.param_dtype
+        s: dict = {
+            "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), init="embed", dtype=dtp),
+            "final_norm": norm_specs(cfg),
+        }
+        if self.n_dense_stack > 0:
+            s["dense_layers"] = stack_specs(self._layer_specs(False),
+                                            self.n_dense_stack)
+        if self.n_moe_layers > 0:
+            s["moe_layers"] = stack_specs(self._layer_specs(True),
+                                          self.n_moe_layers)
+        if not cfg.tie_embeddings:
+            s["head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                  ("embed", "vocab"), dtype=dtp)
+        if cfg.family == "vlm":
+            # frontend is a stub: a single linear adapting patch embeddings
+            s["patch_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                        ("embed", "embed"), dtype=dtp)
+        if cfg.mtp:
+            s["mtp"] = {
+                "proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                                  ("embed", "embed"), dtype=dtp),
+                "block": self._layer_specs(False),
+                "norm_h": norm_specs(cfg), "norm_e": norm_specs(cfg),
+            }
+        return s
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    # ----------------------------------------------------------- blocks
+    def _block(self, p, x, positions, *, moe: bool, prefix_len: int = 0):
+        cfg = self.cfg
+        xn = apply_norm(p["ln1"], cfg, x)
+        if cfg.mla:
+            a = attn.mla_forward(p["attn"], cfg, xn, positions)
+        else:
+            a = attn.gqa_forward(p["attn"], cfg, xn, positions,
+                                 window=cfg.sliding_window,
+                                 prefix_len=prefix_len)
+        x = x + a
+        xn = apply_norm(p["ln2"], cfg, x)
+        if moe:
+            f, aux = moe_apply(p["ffn"], cfg, xn)
+        else:
+            f, aux = ffn_apply(p["ffn"], xn, cfg.act), 0.0
+        x = x + f
+        return constrain(x, ("batch", "seq", "embed")), aux
+
+    def _scan_stack(self, stack, x, positions, *, moe: bool,
+                    prefix_len: int = 0):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            h, aux = carry
+            h, a = self._block(lp, h, positions, moe=moe,
+                               prefix_len=prefix_len)
+            return (h, aux + a), None
+
+        body = jax.checkpoint(
+            body,
+            policy={"nothing_saveable":
+                    jax.checkpoint_policies.nothing_saveable,
+                    "dots_saveable": jax.checkpoint_policies.dots_saveable,
+                    }[cfg.remat_policy],
+            prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stack)
+        return x, aux
+
+    # ---------------------------------------------------------- forward
+    def _embed_inputs(self, params, tokens, patches=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.family == "vlm":
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)  # gemma
+            pe = (patches.astype(x.dtype) @ params["patch_proj"])
+            x = jnp.concatenate([pe, x], axis=1)
+        return constrain(x, ("batch", "seq", "embed"))
+
+    def forward(self, params, tokens, patches=None, *, last_only=False):
+        """tokens (B,S) [+ patches (B,Np,D) for vlm] -> logits, aux.
+
+        last_only=True (serving prefill): logits for the final position
+        only — never materializes the (B,S,V) logit tensor."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        prefix = cfg.n_patch_tokens if cfg.family == "vlm" else 0
+        x = self._embed_inputs(params, tokens, patches)
+        St = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(St)[None], (B, St))
+        aux = jnp.float32(0.0)
+        if self.n_dense_stack > 0:
+            x, a = self._scan_stack(params["dense_layers"], x, positions,
+                                    moe=False, prefix_len=prefix)
+            aux += a
+        if self.n_moe_layers > 0:
+            x, a = self._scan_stack(params["moe_layers"], x, positions,
+                                    moe=True, prefix_len=prefix)
+            aux += a
+        x = apply_norm(params["final_norm"], cfg, x)
+        x = x[:, -S:, :] if prefix else x
+        if last_only:
+            x = x[:, -1:, :]
+        logits = self._logits(params, x)
+        return logits, aux, x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["head"]
+        if cfg.logit_softcap > 0:
+            c = cfg.logit_softcap
+            logits = jnp.tanh(logits / c) * c
+        return logits
+
+    def loss(self, params, batch):
+        """batch: tokens, labels, [mask, patches]."""
+        cfg = self.cfg
+        logits, aux, h = self.forward(params, batch["tokens"],
+                                      batch.get("patches"))
+        main = softmax_xent(logits, batch["labels"], batch.get("mask"))
+        metrics = {"xent": main, "aux": aux}
+        total = main + aux
+        if cfg.mtp:
+            total = total + self._mtp_loss(params, batch, h, metrics)
+        return total, metrics
+
+    def _mtp_loss(self, params, batch, h, metrics):
+        """DeepSeek-V3 multi-token prediction (depth 1): predict t_{i+2}
+        from [norm(h_i); norm(emb(t_{i+1}))] through one extra block."""
+        cfg = self.cfg
+        p = params["mtp"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        # labels are the shift-by-1 stream: emb of t_{i+1} = emb(labels)
+        e = jnp.take(params["embed"], labels, axis=0)
+        hh = jnp.concatenate([apply_norm(p["norm_h"], cfg, h),
+                              apply_norm(p["norm_e"], cfg, e)], axis=-1)
+        hh = hh @ p["proj"]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        hh, _ = self._block(p["block"], hh, positions, moe=False)
+        logits2 = self._logits(params, hh)
+        # target: t_{i+2} = labels shifted left by one
+        tgt = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+        mask = batch.get("mask")
+        m2 = (jnp.ones((B, S), jnp.float32) if mask is None
+              else mask).at[:, -1].set(0.0)
+        mtp = softmax_xent(logits2, tgt, m2)
+        metrics["mtp"] = mtp
+        return cfg.mtp_loss_coef * mtp
+
+    # ----------------------------------------------------------- decode
+    def _init_layer_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.mla:
+            return attn.mla_init_cache(cfg, batch, max_len)
+        return attn.gqa_init_cache(cfg, batch, max_len,
+                                   window=cfg.sliding_window)
+
+    def init_cache(self, batch: int, max_len: int):
+        """Stacked caches matching the scan structure."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            max_len = max_len + cfg.n_patch_tokens
+        one = self._init_layer_cache(batch, max_len)
+        cache = {}
+        if self.n_dense_stack > 0:
+            cache["dense"] = jax.tree_util.tree_map(
+                lambda t: jnp.broadcast_to(
+                    t[None], (self.n_dense_stack,) + t.shape).copy(), one)
+        if self.n_moe_layers > 0:
+            cache["moe"] = jax.tree_util.tree_map(
+                lambda t: jnp.broadcast_to(
+                    t[None], (self.n_moe_layers,) + t.shape).copy(), one)
+        return cache
+
+    def cache_axes(self):
+        """Logical sharding axes mirroring init_cache's structure."""
+        cfg = self.cfg
+        if cfg.mla:
+            one = {"c_kv": ("batch", "cache_seq", None),
+                   "k_rope": ("batch", "cache_seq", None)}
+        else:
+            one = {"k": ("batch", "cache_seq", "kv_heads", None),
+                   "v": ("batch", "cache_seq", "kv_heads", None),
+                   "pos": (None,)}
+        stackax = jax.tree_util.tree_map(
+            lambda ax: ("layers",) + ax, one,
+            is_leaf=lambda x: isinstance(x, tuple))
+        out = {}
+        if self.n_dense_stack > 0:
+            out["dense"] = stackax
+        if self.n_moe_layers > 0:
+            out["moe"] = stackax
+        return out
+
+    def _decode_stack(self, stack, cache, x, pos, *, moe: bool):
+        cfg = self.cfg
+
+        def body(h, xs):
+            lp, lc = xs
+            xn = apply_norm(lp["ln1"], cfg, h)
+            if cfg.mla:
+                a, lc = attn.mla_decode(lp["attn"], cfg, xn, lc, pos)
+            else:
+                a, lc = attn.gqa_decode(lp["attn"], cfg, xn, lc, pos,
+                                        window=cfg.sliding_window)
+            h = h + a
+            xn = apply_norm(lp["ln2"], cfg, h)
+            if moe:
+                f, _ = moe_apply(lp["ffn"], cfg, xn)
+            else:
+                f = ffn_apply(lp["ffn"], xn, cfg.act)
+            h = h + f
+            return constrain(h, ("batch", "seq", "embed")), lc
+
+        x, new_cache = jax.lax.scan(body, x, (stack, cache))
+        return x, new_cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,1), pos scalar absolute position -> (logits, cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.family == "vlm":
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+            pos = pos + cfg.n_patch_tokens
+        x = constrain(x, ("batch", "seq", "embed"))
+        new_cache = {}
+        if self.n_dense_stack > 0:
+            x, new_cache["dense"] = self._decode_stack(
+                params["dense_layers"], cache["dense"], x, pos, moe=False)
+        if self.n_moe_layers > 0:
+            x, new_cache["moe"] = self._decode_stack(
+                params["moe_layers"], cache["moe"], x, pos, moe=True)
+        x = apply_norm(params["final_norm"], cfg, x)
+        return self._logits(params, x), new_cache

@@ -1,0 +1,212 @@
+"""Whisper-tiny style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, 1500, 384) — what the two conv
+layers would output.  This module implements the transformer backbone:
+
+encoder: sinusoidal positions + 4 pre-LN blocks (full self-attention, GELU
+         MLP), final LN.
+decoder: learned positions + 4 pre-LN blocks (causal self-attention,
+         cross-attention to the encoder, GELU MLP); logits tied to the
+         token embedding.
+
+Decode caches: per-layer self-attention K/V plus the cross-attention K/V
+computed once from the encoder output ("prefill").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ParamSpec, abstract_params, constrain,
+                                 dense, init_params, layer_norm,
+                                 softmax_xent, stack_specs)
+from repro.models.config import ModelConfig
+from repro.models.moe import ffn_apply, ffn_specs
+
+
+def _ln_specs(d, dtp):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones", dtype=dtp),
+            "bias": ParamSpec((d,), ("embed",), init="zeros", dtype=dtp)}
+
+
+def _ln(p, x):
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    t = jnp.arange(length, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(channels // 2, dtype=jnp.float32)
+                  * (jnp.log(10000.0) / (channels // 2 - 1)))
+    ang = t * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _enc_layer(self):
+        cfg = self.cfg
+        dtp = cfg.param_dtype
+        return {"ln1": _ln_specs(cfg.d_model, dtp),
+                "attn": attn.gqa_specs(cfg),
+                "ln2": _ln_specs(cfg.d_model, dtp),
+                "ffn": ffn_specs(cfg.d_model, cfg.d_ff, "gelu_mlp", dtp)}
+
+    def _dec_layer(self):
+        cfg = self.cfg
+        dtp = cfg.param_dtype
+        s = self._enc_layer()
+        s["ln_x"] = _ln_specs(cfg.d_model, dtp)
+        s["xattn"] = attn.gqa_specs(cfg)
+        return s
+
+    def param_specs(self):
+        cfg = self.cfg
+        dtp = cfg.param_dtype
+        return {
+            "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), init="embed", dtype=dtp),
+            "pos_dec": ParamSpec((cfg.max_seq_len, cfg.d_model),
+                                 (None, "embed"), init="embed", dtype=dtp),
+            "enc_layers": stack_specs(self._enc_layer(), cfg.encoder_layers),
+            "ln_enc": _ln_specs(cfg.d_model, dtp),
+            "dec_layers": stack_specs(self._dec_layer(), cfg.n_layers),
+            "ln_dec": _ln_specs(cfg.d_model, dtp),
+        }
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    # ---------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        """frames: (B, Sf, D) precomputed frame embeddings (stub)."""
+        cfg = self.cfg
+        B, Sf, D = frames.shape
+        x = frames.astype(cfg.param_dtype) + sinusoids(Sf, D).astype(
+            cfg.param_dtype)
+        x = constrain(x, ("batch", "seq", "embed"))
+        positions = jnp.broadcast_to(jnp.arange(Sf)[None], (B, Sf))
+
+        # bidirectional self-attention: prefix_len = Sf makes every key
+        # visible to every query (the causal part becomes irrelevant)
+        def body_bidir(carry, lp):
+            h = carry
+            a = attn.gqa_forward(lp["attn"], cfg, _ln(lp["ln1"], h),
+                                 positions, rope=False, prefix_len=Sf)
+            h = h + a
+            h = h + ffn_apply(lp["ffn"], _ln(lp["ln2"], h), "gelu_mlp")
+            return constrain(h, ("batch", "seq", "embed")), None
+
+        body_bidir = jax.checkpoint(
+            body_bidir, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+        x, _ = jax.lax.scan(body_bidir, x, params["enc_layers"])
+        return _ln(params["ln_enc"], x)
+
+    def _cross_kv(self, lp, enc_out):
+        cfg = self.cfg
+        B, Sf, _ = enc_out.shape
+        dh, kv = cfg.head_dim, cfg.n_kv_heads
+        k = dense(lp["xattn"]["k"], enc_out).reshape(B, Sf, kv, dh)
+        v = dense(lp["xattn"]["v"], enc_out).reshape(B, Sf, kv, dh)
+        return k, v
+
+    # ---------------------------------------------------------- decoder
+    def forward(self, params, tokens, frames, *, last_only=False):
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc = self.encode(params, frames)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + params["pos_dec"][:S][None]
+        x = constrain(x, ("batch", "seq", "embed"))
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(carry, lp):
+            h = carry
+            a = attn.gqa_forward(lp["attn"], cfg, _ln(lp["ln1"], h),
+                                 positions, rope=False)
+            h = h + a
+            kv = self._cross_kv(lp, enc)
+            a = attn.gqa_forward(lp["xattn"], cfg, _ln(lp["ln_x"], h),
+                                 positions, rope=False, kv_override=kv)
+            h = h + a
+            h = h + ffn_apply(lp["ffn"], _ln(lp["ln2"], h), "gelu_mlp")
+            return constrain(h, ("batch", "seq", "embed")), None
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        x = _ln(params["ln_dec"], x)
+        if last_only:
+            x = x[:, -1:, :]
+        return x @ params["embed"].T          # tied head
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"], batch["frames"])
+        return softmax_xent(logits, batch["labels"], batch.get("mask")), {}
+
+    # ----------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        L = cfg.n_layers
+        self_c = attn.gqa_init_cache(cfg, batch, max_len)
+        dh, kv = cfg.head_dim, cfg.n_kv_heads
+        Sf = cfg.encoder_seq
+        return {
+            "self": jax.tree_util.tree_map(
+                lambda t: jnp.broadcast_to(t[None], (L,) + t.shape).copy(),
+                self_c),
+            "cross_k": jnp.zeros((L, batch, Sf, kv, dh), cfg.param_dtype),
+            "cross_v": jnp.zeros((L, batch, Sf, kv, dh), cfg.param_dtype),
+        }
+
+    def cache_axes(self):
+        return {
+            "self": {"k": ("layers", "batch", "cache_seq", "kv_heads", None),
+                     "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+                     "pos": ("layers", None)},
+            "cross_k": ("layers", "batch", None, "kv_heads", None),
+            "cross_v": ("layers", "batch", None, "kv_heads", None),
+        }
+
+    def prefill_cross(self, params, cache, frames):
+        """Compute encoder + per-layer cross K/V once per request batch."""
+        enc = self.encode(params, frames)
+
+        def per_layer(lp):
+            return self._cross_kv(lp, enc)
+
+        ks, vs = jax.lax.map(per_layer, params["dec_layers"])
+        return {**cache, "cross_k": ks, "cross_v": vs}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1)[None]
+        x = constrain(x, ("batch", "seq", "embed"))
+
+        def body(h, xs):
+            lp, lc, ck, cv = xs
+            a, lc = attn.gqa_decode(lp["attn"], cfg, _ln(lp["ln1"], h),
+                                    lc, pos, rope=False)
+            h = h + a
+            a, _ = attn.gqa_decode(lp["xattn"], cfg, _ln(lp["ln_x"], h),
+                                   None, pos, rope=False, cross_kv=(ck, cv))
+            h = h + a
+            h = h + ffn_apply(lp["ffn"], _ln(lp["ln2"], h), "gelu_mlp")
+            return constrain(h, ("batch", "seq", "embed")), lc
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"],
+                      cache["cross_k"], cache["cross_v"]))
+        x = _ln(params["ln_dec"], x)
+        logits = x @ params["embed"].T
+        return logits, {**cache, "self": new_self}

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, adafactor, apply_updates, make_optimizer,
+    global_norm, clip_by_global_norm,
+)

@@ -1,0 +1,145 @@
+"""Optimizers (pytree-native, optax-style interface, no dependencies).
+
+adamw      — fp32 moments; the default for <33B archs.
+adafactor  — factored second moment for >=2D params (row/col RMS), no
+             momentum: O(n+m) state instead of O(n*m).  Required to fit
+             the 33B/72B/671B optimizer state into 16 GB/chip (DESIGN §5);
+             moments inherit the parameter sharding (ZeRO-1 minimum).
+
+Both return updates with the *parameter dtype* so the apply step never
+upcasts the model; internal math is fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32)
+                      + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+# ------------------------------------------------------------------- adamw
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"mu": jax.tree_util.tree_map(zeros, params),
+                "nu": jax.tree_util.tree_map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            u = -(lr * (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+                  + lr * weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), mu, nu
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        trips = [upd(g, m, n, p) for g, m, n, p
+                 in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        updates = treedef.unflatten([t[0] for t in trips])
+        mu = treedef.unflatten([t[1] for t in trips])
+        nu = treedef.unflatten([t[2] for t in trips])
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------- adafactor
+def adafactor(lr: float = 1e-4, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored RMS (Shazeer & Stern 2018), momentum-free."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree_util.tree_map(per_leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)          # increasing decay schedule
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                vnew = {"vr": vr, "vc": vc}
+            else:
+                denom = beta * v["v"] + (1 - beta) * g2
+                vnew = {"v": denom}
+            u = g * jax.lax.rsqrt(denom + eps)
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr * u
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype), vnew
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        pairs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        updates = treedef.unflatten([u for u, _ in pairs])
+        vnew = treedef.unflatten([v for _, v in pairs])
+        return updates, {"v": vnew, "step": step}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,6 @@
+from repro.runtime.executor import (  # noqa: F401
+    FaultPlan, RDLBTrainExecutor, StepResult, WorkerState,
+)
+from repro.runtime.serve_executor import (  # noqa: F401
+    RDLBServeExecutor, Request,
+)

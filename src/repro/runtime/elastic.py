@@ -1,0 +1,60 @@
+"""Elastic worker-set management (beyond-paper: the paper terminates after
+the loop completes; we keep TRAINING through failures).
+
+After a step that lost workers, the coordinator:
+  1. shrinks the worker set to the survivors (the rDLB queue already
+     guaranteed the step completed);
+  2. on hardware, rebuilds the mesh over the surviving slices and
+     re-shards params/opt-state onto it (full-array checkpoint leaves make
+     this a plain device_put per leaf — see repro.checkpoint);
+  3. re-balances the task count so chunk shapes stay static.
+
+On this CPU container, (2) is exercised at reduced scale by re-meshing
+across host devices in the integration tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+from repro.runtime.executor import RDLBTrainExecutor, WorkerState
+
+
+@dataclasses.dataclass
+class ElasticState:
+    generation: int = 0
+    history: list = dataclasses.field(default_factory=list)
+
+
+def shrink_to_survivors(executor: RDLBTrainExecutor,
+                        state: Optional[ElasticState] = None
+                        ) -> ElasticState:
+    """Drop dead workers; renumber; record the generation change."""
+    state = state or ElasticState()
+    survivors = [w.wid for w in executor.workers if w.alive]
+    if len(survivors) == len(executor.workers):
+        return state
+    state.generation += 1
+    state.history.append({"generation": state.generation,
+                          "survivors": survivors})
+    executor.n_workers = max(1, len(survivors))
+    executor.workers = [WorkerState(i) for i in range(executor.n_workers)]
+    return state
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    """Re-shard a pytree onto a (new) mesh: elastic restore step (2)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, shardings)
+
+
+def rebalance_tasks(n_tasks: int, n_workers: int, global_batch: int) -> int:
+    """Keep tasks divisible into the batch and >= workers (static shapes)."""
+    n = max(n_workers, n_tasks)
+    while global_batch % n:
+        n += 1
+    return min(n, global_batch)

@@ -1,0 +1,218 @@
+"""rDLB training executor: the paper's technique as a JAX runtime feature.
+
+One global training step = N independent TASKS (grad-accumulation
+microbatches, each a fixed-shape jitted computation over a slice of the
+global batch).  Tasks are self-scheduled to WORKERS (data-parallel worker
+groups; simulated in-process on CPU) through the SAME ``RobustQueue`` the
+discrete-event simulator drives:
+
+  * a free worker requests work; the DLS technique sizes its chunk of tasks;
+  * with rDLB, once every task is assigned, idle workers receive DUPLICATES
+    of in-flight tasks (oldest first) — no failure detection anywhere;
+  * gradient accumulation is EXACTLY-ONCE BY TASK ID: a duplicate's result
+    is discarded if the original already landed (and vice versa).  Because
+    the data pipeline is content-addressed (repro.data), a re-executed task
+    computes bit-identical gradients, so which copy wins is irrelevant;
+  * fail-stop workers simply never report; their in-flight tasks are
+    re-issued to survivors.  Up to W-1 worker losses are tolerated within
+    a step (the paper's P-1 claim, at chunk granularity);
+  * without rDLB, a failure turns the step into the paper's Fig. 1b hang —
+    surfaced as ``StepResult.hung`` instead of an infinite wait.
+
+After a step with losses, ``runtime.elastic`` shrinks the worker set (and,
+on hardware, re-meshes + re-shards via the checkpoint substrate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dls, rdlb
+from repro.data import chunk_batch
+from repro.optim import apply_updates, clip_by_global_norm, make_optimizer
+
+
+@dataclasses.dataclass
+class WorkerState:
+    wid: int
+    alive: bool = True
+    speed: float = 1.0                    # <1.0 = straggler
+    fail_after_tasks: Optional[int] = None  # fail-stop after N task execs
+    tasks_done: int = 0                   # executed (incl. wasted)
+    credit: float = 0.0
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Per-step fault/perturbation injection (worker id -> behaviour)."""
+    fail_after: dict = dataclasses.field(default_factory=dict)
+    slow: dict = dataclasses.field(default_factory=dict)
+
+    def apply(self, workers: list[WorkerState]) -> None:
+        for w in workers:
+            if w.wid in self.fail_after:
+                w.fail_after_tasks = self.fail_after[w.wid]
+            if w.wid in self.slow:
+                w.speed = self.slow[w.wid]
+
+
+@dataclasses.dataclass
+class StepResult:
+    params: Any
+    opt_state: Any
+    loss: float
+    hung: bool
+    n_tasks: int
+    n_duplicates: int
+    wasted_tasks: int
+    tasks_by_worker: dict
+    survivors: list
+
+
+class RDLBTrainExecutor:
+    """Drives model training with DLS + rDLB task scheduling.
+
+    Parameters
+    ----------
+    model:       any repro.models model (has .loss(params, batch)).
+    n_workers:   data-parallel worker groups.
+    n_tasks:     grad-accum microbatches per global step (tasks).
+    technique:   DLS technique name (repro.core.dls.ALL_TECHNIQUES).
+    rdlb:        enable the robust re-issue path (False = plain DLS4LB).
+    exact_accumulation: store per-task grads and reduce in task order —
+                 bit-identical results regardless of schedule (used by the
+                 equality tests); False accumulates in arrival order.
+    """
+
+    def __init__(self, model, *, n_workers: int = 4, n_tasks: int = 8,
+                 technique: str = "FAC", rdlb_enabled: bool = True,
+                 optimizer: str = "adamw", lr: float = 1e-3,
+                 grad_clip: float = 1.0, exact_accumulation: bool = False,
+                 max_duplicates: Optional[int] = None,
+                 loss_fn: Optional[Callable] = None):
+        self.model = model
+        self.n_workers = n_workers
+        self.n_tasks = n_tasks
+        self.technique_name = technique
+        self.rdlb_enabled = rdlb_enabled
+        self.exact_accumulation = exact_accumulation
+        self.max_duplicates = max_duplicates
+        self.opt = make_optimizer(optimizer, lr=lr)
+        self.grad_clip = grad_clip
+        base_loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
+        self._grad_fn = jax.jit(jax.value_and_grad(base_loss))
+        self.workers = [WorkerState(w) for w in range(n_workers)]
+
+    # ------------------------------------------------------------- helpers
+    def reset_workers(self) -> None:
+        self.workers = [WorkerState(w) for w in range(self.n_workers)]
+
+    @property
+    def alive_workers(self) -> list[WorkerState]:
+        return [w for w in self.workers if w.alive]
+
+    def _task_batch(self, batch: dict, task_id: int) -> dict:
+        B = batch["tokens"].shape[0]
+        rows = B // self.n_tasks
+        return chunk_batch(batch, task_id * rows, rows)
+
+    # ---------------------------------------------------------------- step
+    def train_step(self, params, opt_state, batch: dict, *,
+                   fault_plan: Optional[FaultPlan] = None,
+                   max_rounds: int = 100000) -> StepResult:
+        B = batch["tokens"].shape[0]
+        assert B % self.n_tasks == 0, (B, self.n_tasks)
+        if fault_plan:
+            fault_plan.apply(self.workers)
+        technique = dls.make_technique(self.technique_name, self.n_tasks,
+                                       self.n_workers)
+        queue = rdlb.RobustQueue(self.n_tasks, technique,
+                                 rdlb_enabled=self.rdlb_enabled,
+                                 max_duplicates=self.max_duplicates)
+        done = np.zeros(self.n_tasks, dtype=bool)
+        per_task: dict[int, Any] = {}
+        grad_acc = None
+        loss_sum, n_done = 0.0, 0
+        tasks_by_worker: dict[int, int] = {}
+        hung = False
+        rounds = 0
+        stalled_rounds = 0
+        while not queue.done:
+            progressed = False
+            for w in self.workers:
+                if not w.alive:
+                    continue
+                w.credit += w.speed
+                while w.credit >= 1.0 and not queue.done:
+                    w.credit -= 1.0
+                    chunk = queue.request(w.wid)
+                    if chunk is None:
+                        break
+                    # fail-stop mid-chunk: assigned but never reported
+                    if (w.fail_after_tasks is not None
+                            and w.tasks_done >= w.fail_after_tasks):
+                        w.alive = False
+                        break
+                    for t in chunk.tasks():
+                        loss, grads = self._grad_fn(
+                            params, self._task_batch(batch, t))
+                        w.tasks_done += 1
+                        tasks_by_worker[w.wid] = \
+                            tasks_by_worker.get(w.wid, 0) + 1
+                        if done[t]:
+                            continue                    # duplicate: discard
+                        done[t] = True
+                        n_done += 1
+                        loss_sum += float(loss)
+                        if self.exact_accumulation:
+                            per_task[t] = grads
+                        elif grad_acc is None:
+                            grad_acc = jax.tree_util.tree_map(
+                                lambda g: g.astype(jnp.float32), grads)
+                        else:
+                            grad_acc = jax.tree_util.tree_map(
+                                lambda a, g: a + g.astype(jnp.float32),
+                                grad_acc, grads)
+                    compute_time = float(chunk.size)
+                    technique.record(w.wid, chunk.size, compute_time)
+                    queue.report(chunk)
+                    progressed = True
+            rounds += 1
+            # A barrier wait (AWF-B/D weight collection) clears via rDLB
+            # duplicate reports after 1-2 polls: allow a short grace window
+            # before declaring the paper's Fig. 1b hang.
+            stalled_rounds = 0 if progressed else stalled_rounds + 1
+            if stalled_rounds > 8 or rounds > max_rounds:
+                hung = True                 # paper Fig. 1b: would wait forever
+                break
+
+        if self.exact_accumulation and per_task:
+            grad_acc = None
+            for t in sorted(per_task):      # fixed reduction order
+                g = per_task[t]
+                if grad_acc is None:
+                    grad_acc = jax.tree_util.tree_map(
+                        lambda x: x.astype(jnp.float32), g)
+                else:
+                    grad_acc = jax.tree_util.tree_map(
+                        lambda a, x: a + x.astype(jnp.float32), grad_acc, g)
+
+        if hung or grad_acc is None:
+            return StepResult(params, opt_state, float("nan"), True,
+                              self.n_tasks, queue.n_duplicates,
+                              queue.wasted_tasks, tasks_by_worker,
+                              [w.wid for w in self.alive_workers])
+
+        grads = jax.tree_util.tree_map(lambda g: g / self.n_tasks, grad_acc)
+        grads, _ = clip_by_global_norm(grads, self.grad_clip)
+        updates, opt_state = self.opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return StepResult(params, opt_state, loss_sum / max(1, n_done),
+                          False, self.n_tasks, queue.n_duplicates,
+                          queue.wasted_tasks, tasks_by_worker,
+                          [w.wid for w in self.alive_workers])

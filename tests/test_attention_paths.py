@@ -1,0 +1,91 @@
+"""Attention-path equivalences: flash_attend (chunked jnp) vs dense,
+sliding window, prefix-LM, MLA absorbed decode vs expanded forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+@pytest.mark.parametrize("window,prefix", [(0, 0), (64, 0), (0, 32)])
+def test_flash_attend_matches_dense(window, prefix):
+    B, S, H, D = 2, 256, 2, 32
+    q, k, v = rand(0, (B, S, H, D)), rand(1, (B, S, H, D)), rand(2, (B, S, H, D))
+    mask = attn.causal_mask(S, S, window=window, prefix_len=prefix)
+    want = attn._attend(q, k, v, mask, D ** -0.5)
+    got = attn.flash_attend(q, k, v, D ** -0.5, window=window,
+                            prefix_len=prefix, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_mla_decode_matches_forward():
+    """Absorbed-matmul decode over the compressed cache == expanded
+    full-sequence attention, position by position."""
+    cfg = ModelConfig(n_layers=1, d_model=64, n_heads=4, mla=True,
+                      kv_lora_rank=16, q_lora_rank=24, rope_head_dim=8,
+                      nope_head_dim=16, v_head_dim=16, vocab_size=64)
+    from repro.models.common import init_params
+    specs = attn.mla_specs(cfg)
+    p = init_params(specs, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    x = rand(5, (B, S, cfg.d_model)).astype(jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = attn.mla_forward(p, cfg, x, positions)
+    cache = attn.mla_init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        o, cache = attn.mla_decode(p, cfg, x[:, t:t + 1], cache,
+                                   jnp.int32(t))
+        outs.append(o[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_gqa_sliding_window_decode_rolls():
+    """Rolling cache produces the same logits as a full cache restricted
+    to the window."""
+    cfg = ModelConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                      vocab_size=64)
+    from repro.models.common import init_params
+    p = init_params(attn.gqa_specs(cfg), jax.random.PRNGKey(1))
+    B, S, W = 1, 12, 4
+    x = rand(7, (B, S, cfg.d_model)).astype(jnp.float32)
+    cache_w = attn.gqa_init_cache(cfg, B, S, window=W)
+    cache_f = attn.gqa_init_cache(cfg, B, S)
+    for t in range(S):
+        ow, cache_w = attn.gqa_decode(p, cfg, x[:, t:t + 1], cache_w,
+                                      jnp.int32(t), window=W)
+        of, cache_f = attn.gqa_decode(p, cfg, x[:, t:t + 1], cache_f,
+                                      jnp.int32(t), window=W)
+        np.testing.assert_allclose(np.asarray(ow), np.asarray(of),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_rwkv_chunked_equals_sequential_long():
+    from repro.models.rwkv6 import wkv6_chunked, wkv6_sequential
+    T, dk, dv = 128, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r = jax.random.normal(ks[0], (T, dk))
+    k = jax.random.normal(ks[1], (T, dk))
+    v = jax.random.normal(ks[2], (T, dv))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (T, dk)) * 0.4 - 0.5))
+    u = jax.random.normal(ks[4], (dk,))
+    s0 = jnp.zeros((dk, dv))
+    y1, s1 = wkv6_sequential(r, k, v, w, u, s0)
+    y2, s2 = wkv6_chunked(r, k, v, w, u, s0, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=2e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1, np.float32),
+                               np.asarray(s2, np.float32), atol=2e-4,
+                               rtol=1e-3)

@@ -1,0 +1,127 @@
+"""Unit + property tests for the 13 DLS techniques."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dls, rdlb
+
+
+@pytest.mark.parametrize("name", dls.ALL_TECHNIQUES)
+def test_factory_all_techniques(name):
+    t = dls.make_technique(name, 100, 4)
+    assert t.name == name
+    c = t.next_chunk(0, 100)
+    assert 1 <= c <= 100
+
+
+@given(N=st.integers(1, 5000), P=st.integers(1, 64),
+       name=st.sampled_from(dls.ALL_TECHNIQUES))
+@settings(max_examples=60, deadline=None)
+def test_chunks_cover_exactly_N(N, P, name):
+    """Scheduling via any technique assigns every iteration exactly once."""
+    t = dls.make_technique(name, N, P)
+    remaining, pe, total = N, 0, 0
+    while remaining > 0:
+        c = t.next_chunk(pe % P, remaining)
+        assert 1 <= c <= remaining
+        total += c
+        remaining -= c
+        pe += 1
+    assert total == N
+
+
+def test_ss_unit_chunks():
+    t = dls.make_technique("SS", 50, 4)
+    assert all(t.next_chunk(i % 4, 50 - i) == 1 for i in range(50))
+
+
+def test_static_is_block():
+    t = dls.make_technique("STATIC", 100, 4)
+    assert t.next_chunk(0, 100) == 25
+
+
+def test_gss_decreasing():
+    t = dls.make_technique("GSS", 1000, 4)
+    sizes, R = [], 1000
+    while R > 0:
+        c = t.next_chunk(0, R)
+        sizes.append(c)
+        R -= c
+    assert sizes == sorted(sizes, reverse=True)
+    assert sizes[0] == math.ceil(1000 / 4)
+
+
+def test_tss_linear_decrease():
+    t = dls.make_technique("TSS", 1000, 4)
+    sizes, R = [], 1000
+    while R > 0:
+        c = t.next_chunk(0, R)
+        sizes.append(c)
+        R -= c
+    deltas = [a - b for a, b in zip(sizes, sizes[1:])][:-1]
+    assert all(abs(d - deltas[0]) <= 1 for d in deltas)  # ~linear
+
+
+def test_fac_halving_batches():
+    t = dls.make_technique("FAC", 1024, 4)
+    first_batch = [t.next_chunk(i, 1024 - 128 * i) for i in range(4)]
+    assert all(c == 128 for c in first_batch)   # batch=512 split over 4
+
+
+def test_mfsc_matches_fac_chunk_count():
+    N, P = 10000, 8
+    n_fac = dls.fac_chunk_count(N, P)
+    t = dls.make_technique("mFSC", N, P)
+    size = t.next_chunk(0, N)
+    assert abs(N / size - n_fac) / n_fac < 0.35
+
+
+def test_rand_bounds():
+    N, P = 10000, 8
+    t = dls.make_technique("RAND", N, P, seed=3)
+    lo, hi = N // (100 * P), math.ceil(N / (2 * P))
+    for i in range(200):
+        c = t.next_chunk(i % P, N)
+        assert lo <= c <= hi
+
+
+def test_awf_learns_weights():
+    """A 4x faster PE should receive larger chunks once measured."""
+    t = dls.make_technique("AWF-C", 10000, 2)
+    # bootstrap batch
+    c0 = t.next_chunk(0, 10000)
+    c1 = t.next_chunk(1, 10000 - c0)
+    t.record(0, c0, compute_time=c0 * 1.0)       # slow PE
+    t.record(1, c1, compute_time=c1 * 0.25)      # fast PE
+    n0 = t.next_chunk(0, 5000)
+    t.record(0, n0, n0 * 1.0)
+    n1 = t.next_chunk(1, 5000 - n0)
+    assert n1 > n0
+
+
+def test_af_uses_mu_sigma():
+    t = dls.make_technique("AF", 10000, 2)
+    for pe, speed in ((0, 1.0), (1, 0.1)):
+        for _ in range(3):
+            c = t.next_chunk(pe, 10000)
+            t.record(pe, c, compute_time=c * speed)
+    slow = t.next_chunk(0, 5000)
+    fast = t.next_chunk(1, 5000)
+    assert fast > slow
+
+
+def test_unknown_technique_raises():
+    with pytest.raises(ValueError):
+        dls.make_technique("NOPE", 10, 2)
+
+
+@given(N=st.integers(1, 500), P=st.integers(1, 16),
+       name=st.sampled_from(dls.DYNAMIC_TECHNIQUES))
+@settings(max_examples=40, deadline=None)
+def test_queue_drains_any_technique(N, P, name):
+    t = dls.make_technique(name, N, P)
+    q = rdlb.RobustQueue(N, t)
+    rdlb.run_to_completion(q, range(P))
+    assert q.done and q.n_finished == N

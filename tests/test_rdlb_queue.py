@@ -1,0 +1,121 @@
+"""Property tests for the rDLB robust queue (the paper's core mechanism)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dls, rdlb
+
+
+def make_queue(N, P, technique="FAC", **kw):
+    return rdlb.RobustQueue(N, dls.make_technique(technique, N, P), **kw)
+
+
+def test_flags_lifecycle():
+    q = make_queue(10, 2, "SS")
+    assert not q.all_scheduled and not q.done
+    c = q.request(0)
+    assert q.flags[c.start] == rdlb.Flag.SCHEDULED
+    q.report(c)
+    assert q.flags[c.start] == rdlb.Flag.FINISHED
+    assert q.n_finished == c.size
+
+
+def test_nonrobust_returns_none_when_all_scheduled():
+    """Paper Fig. 1b: without rDLB, nothing to hand out after full
+    assignment even though work is unfinished."""
+    q = make_queue(4, 2, "SS", rdlb_enabled=False)
+    chunks = [q.request(0) for _ in range(4)]
+    assert all(c is not None for c in chunks)
+    assert q.request(1) is None and not q.done
+
+
+def test_rdlb_reissues_oldest_unfinished():
+    q = make_queue(4, 2, "SS", rdlb_enabled=True)
+    chunks = [q.request(0) for _ in range(4)]
+    dup = q.request(1)
+    assert dup is not None and dup.duplicate
+    assert dup.start == chunks[0].start          # oldest first
+
+
+def test_first_completion_wins_and_waste_counted():
+    q = make_queue(2, 2, "SS")
+    c0 = q.request(0)
+    c1 = q.request(0)
+    dup = q.request(1)
+    assert dup.start == c0.start
+    q.report(dup)                                # duplicate lands first
+    assert q.n_finished == 1
+    q.report(c0)                                 # original is now wasted
+    assert q.n_finished == 1 and q.wasted_tasks == c0.size
+    q.report(c1)
+    assert q.done
+
+
+def test_max_duplicates_cap():
+    q = make_queue(2, 4, "SS", max_duplicates=1)
+    q.request(0), q.request(0)
+    d1 = q.request(1)
+    d2 = q.request(2)                            # both originals duplicated
+    d3 = q.request(3)                            # cap reached
+    assert d1 is not None and d2 is not None and d3 is None
+
+
+@given(N=st.integers(1, 200), P=st.integers(1, 8), seed=st.integers(0, 999),
+       technique=st.sampled_from(("SS", "FAC", "GSS", "TSS", "mFSC")))
+@settings(max_examples=50, deadline=None)
+def test_exactly_once_any_completion_order(N, P, seed, technique):
+    """Shuffle completions arbitrarily (duplicates racing originals):
+    every task finishes exactly once; wasted = executed - N."""
+    rng = random.Random(seed)
+    q = make_queue(N, P, technique)
+    inflight = []
+    executed = 0
+    while not q.done:
+        progressed = False
+        for pe in range(P):
+            c = q.request(pe)
+            if c is not None:
+                inflight.append(c)
+                progressed = True
+        rng.shuffle(inflight)
+        # report a random subset
+        k = max(1, len(inflight) // 2) if inflight else 0
+        for c in inflight[:k]:
+            executed += c.size
+            q.report(c)
+        inflight = inflight[k:]
+        if not progressed and not inflight:
+            break
+    assert q.done
+    assert q.n_finished == N
+    assert q.wasted_tasks == executed - N
+    assert all(f == rdlb.Flag.FINISHED for f in q.flags)
+
+
+@given(N=st.integers(2, 100), P=st.integers(2, 8))
+@settings(max_examples=30, deadline=None)
+def test_tolerates_P_minus_1_losses(N, P):
+    """Chunks held by P-1 'dead' PEs are re-issued; survivor finishes all."""
+    q = make_queue(N, P, "FAC")
+    # every PE takes one chunk; PEs 1..P-1 never report (fail-stop)
+    held = [q.request(pe) for pe in range(P)]
+    if held[0] is not None:
+        q.report(held[0])
+    rounds = 0
+    while not q.done and rounds < 10 * N:
+        c = q.request(0)                          # lone survivor
+        if c is None:
+            break
+        q.report(c)
+        rounds += 1
+    assert q.done and q.n_finished == N
+
+
+def test_stats_shape():
+    q = make_queue(10, 2)
+    rdlb.run_to_completion(q, range(2))
+    s = q.stats()
+    assert s["n_tasks"] == 10 and s["n_finished"] == 10
+    assert s["n_assignments"] >= s["n_duplicates"]

@@ -1,0 +1,35 @@
+"""FePIA robustness metric tests (paper §4.1, Figs. 4-5 machinery)."""
+
+import math
+
+from repro.core import robustness
+
+
+def test_radius_basic():
+    assert robustness.robustness_radius(12.0, 10.0) == 2.0
+    assert robustness.robustness_radius(9.0, 10.0) == 0.0
+    assert math.isinf(robustness.robustness_radius(math.inf, 10.0))
+
+
+def test_metric_normalizes_to_best():
+    rho = robustness.robustness_metric({"SS": 2.0, "GSS": 8.0})
+    assert rho["SS"] == 1.0 and rho["GSS"] == 4.0
+
+
+def test_hang_maps_to_inf():
+    rho = robustness.robustness_metric({"SS": 1.0, "GSS": math.inf})
+    assert rho["SS"] == 1.0 and math.isinf(rho["GSS"])
+
+
+def test_zero_radius_floor():
+    rho = robustness.robustness_metric({"A": 0.0, "B": 1.0})
+    assert rho["A"] == 1.0 and rho["B"] > 1.0
+
+
+def test_flexibility_resilience_wrappers():
+    tb = {"SS": 10.0, "FAC": 10.0}
+    tp = {"SS": 11.0, "FAC": 14.0}
+    flex = robustness.flexibility(tp, tb)
+    res = robustness.resilience(tp, tb)
+    assert flex == res
+    assert flex["SS"] == 1.0 and flex["FAC"] == 4.0
