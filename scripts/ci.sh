@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification entrypoint — the exact command the roadmap/driver
+# runs.  Usage:  scripts/ci.sh [extra pytest args]
+#   scripts/ci.sh -m "not slow"     # skip long-running tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -101,7 +101,11 @@ class CheckpointManager:
     def latest(self) -> Optional[Path]:
         if not self.root.exists():
             return None
-        steps = sorted(self.root.glob("step_*"))
+        # exclude in-progress async writes (step_*.tmp) and anything
+        # without a published manifest
+        steps = sorted(p for p in self.root.glob("step_*")
+                       if p.suffix != ".tmp"
+                       and (p / "manifest.json").exists())
         return steps[-1] if steps else None
 
     def wait(self):
@@ -130,6 +134,7 @@ class CheckpointManager:
         return True
 
     def restore_latest(self, target, *, shardings=None):
+        self.wait()                       # a save may be in flight
         latest = self.latest()
         if latest is None:
             return None

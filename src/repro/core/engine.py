@@ -1,0 +1,393 @@
+"""The unified self-scheduling ENGINE: one master-worker loop for all of
+simulation, training, and serving.
+
+The paper's claim is that a single mechanism — proactive duplicate
+re-issue on idle time around a central ``RobustQueue`` — robustifies any
+DLS execution.  The engine makes that literal in code: ONE implementation
+of the request -> execute -> report loop, with worker liveness (fail-stop
+by time or by task count), speed/latency perturbations, batch-weight
+barrier polling, Fig.-1b hang surfacing, and unified metrics.  What the
+tasks *are* is delegated to a small :class:`WorkerBackend`:
+
+  * the discrete-event simulator is a backend whose ``execute`` does
+    nothing (only nominal task costs matter) — the engine's virtual-time
+    event loop IS the simulator;
+  * ``rdlb.run_to_completion`` is the same loop with unit costs;
+  * the training executor's backend computes per-microbatch gradients and
+    commits them exactly-once by task id;
+  * the serving executor's backend decodes request chunks (optionally as
+    one padded, jitted batch) and commits first-completion-wins outputs.
+
+Because every driver shares this loop, simulated and executed schedules
+cannot drift apart: the same (technique, scenario, seed) produces the
+same assignment log whether the backend computes real results or not
+(the SimAS property — simulation-assisted selection requires the
+simulator to drive the exact production scheduling path).
+
+Two execution modes:
+
+``Engine.run()``
+    Deterministic virtual-time event loop (a heap of timed events, master
+    transactions serialized with overhead ``h``, message latencies,
+    fail-stop instants).  Causality is exact: a duplicate is only issued
+    if, at that virtual instant, the original chunk is unfinished.
+
+``Engine.run_threaded()``
+    Real concurrency: one OS thread per worker, wall-clock time.  rDLB
+    duplicates genuinely race their originals and first-completion-wins
+    is physical, not an artifact of round-robin ordering.  Results are
+    identical for deterministic backends (greedy decode, exactly-once
+    grads); only attribution (who won) varies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import rdlb
+
+# Event kinds.  *_ARRIVE are master-side (message already in flight —
+# processed even if the sender died after sending); REQUEST/COMPLETE are
+# worker-side.  Master transactions are serialized with overhead h and see
+# the queue state AT ARRIVAL TIME (a perturbed worker's delayed message
+# must not block healthy workers — the master is only busy h/transaction).
+REQUEST, REQ_ARRIVE, COMPLETE, REP_ARRIVE = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class EngineWorker:
+    """Liveness/perturbation state of one worker (PE / replica / group).
+
+    ``fail_time`` is a virtual-time fail-stop instant (simulator
+    scenarios); ``fail_after_tasks`` is a count-based fail-stop (executor
+    fault plans: the worker dies at its next assignment once it has
+    executed that many tasks, holding the chunk).  Both may be set.
+    """
+    wid: int
+    speed: float = 1.0                      # <1.0 = straggler
+    msg_latency: float = 0.0                # extra seconds per message
+    fail_time: Optional[float] = None       # virtual fail-stop instant
+    fail_after_tasks: Optional[int] = None  # count-based fail-stop
+    sleep_per_task: float = 0.0             # threaded mode: injected delay
+    alive: bool = True
+    tasks_done: int = 0                     # executed, incl. wasted
+    busy: float = 0.0                       # virtual compute seconds
+
+    def alive_at(self, t: float) -> bool:
+        return self.alive and (self.fail_time is None or t < self.fail_time)
+
+    def fails_by_count(self) -> bool:
+        return (self.fail_after_tasks is not None
+                and self.tasks_done >= self.fail_after_tasks)
+
+
+class WorkerBackend:
+    """What a chunk of tasks *is*.  The engine owns scheduling; the
+    backend owns execution and result reduction.
+
+    ``execute`` runs the chunk and returns an opaque payload;
+    ``cost`` is the chunk's nominal compute seconds on an unperturbed
+    worker (the engine divides by worker speed);
+    ``commit`` applies the payload for exactly the task ids this report
+    newly finished (exactly-once / first-completion-wins reduction) —
+    called under the engine's commit lock in threaded mode.
+    """
+
+    def execute(self, chunk: rdlb.Chunk, wid: int) -> Any:
+        return None
+
+    def cost(self, chunk: rdlb.Chunk, wid: int) -> float:
+        return float(chunk.size)
+
+    def commit(self, chunk: rdlb.Chunk, wid: int, payload: Any,
+               newly: list[int]) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Unified per-run metrics, identical across all four drivers."""
+    t_virtual: float             # virtual makespan (inf = hang); wall-clock
+                                 # seconds in threaded mode
+    hung: bool
+    n_tasks: int
+    n_finished: int
+    n_assignments: int
+    n_duplicates: int
+    wasted_tasks: int            # task executions whose result was discarded
+    by_worker: dict              # wid -> tasks executed (incl. wasted)
+    worker_busy: np.ndarray      # per-worker compute seconds
+    worker_idle: np.ndarray      # per-worker idle-before-termination seconds
+    survivors: list              # wids alive at termination
+    assignment_log: list         # every Chunk, in assignment order
+
+    @property
+    def hang(self) -> bool:
+        return self.hung
+
+
+class Engine:
+    """One self-scheduling master-worker loop around a RobustQueue.
+
+    Parameters
+    ----------
+    queue:    the RobustQueue (owns DLS chunk sizing + rDLB re-issue).
+    workers:  EngineWorker list (liveness, speed, latency, fail plans).
+    backend:  WorkerBackend (execution + reduction).
+    h:        master scheduling overhead per transaction (virtual seconds).
+    horizon:  virtual-time bound; exceeding it reports a hang.
+    record_feedback: feed (size, compute_time, sched_time) back into the
+              technique on every report — the adaptive AWF-*/AF loop.
+              Nonadaptive techniques ignore the measurements.
+    max_fruitless_polls: consecutive idle polls (no assignment, no new
+              completion) before the run is declared livelocked/hung —
+              surfaces Fig. 1b instead of spinning to the horizon.
+    """
+
+    def __init__(self, queue: rdlb.RobustQueue,
+                 workers: list[EngineWorker],
+                 backend: WorkerBackend, *,
+                 h: float = 1e-4,
+                 horizon: float = 1e7,
+                 record_feedback: bool = True,
+                 max_fruitless_polls: Optional[int] = None) -> None:
+        self.queue = queue
+        self.workers = workers
+        self.backend = backend
+        self.h = h
+        self.horizon = horizon
+        self.record_feedback = record_feedback
+        P = len(workers)
+        self._by_wid = {w.wid: w for w in workers}
+        self.max_fruitless_polls = (max_fruitless_polls
+                                    if max_fruitless_polls is not None
+                                    else max(256, 64 * P))
+        self.by_worker: dict[int, int] = {}
+        self.assignment_log: list[rdlb.Chunk] = []
+        self._commit_lock = threading.Lock()
+
+    # --------------------------------------------------------------- common
+    def _feedback(self, chunk: rdlb.Chunk, compute_time: float,
+                  sched_time: float) -> None:
+        if self.record_feedback:
+            self.queue.record_feedback(chunk, compute_time, sched_time)
+
+    def _execute(self, chunk: rdlb.Chunk, wid: int) -> Any:
+        payload = self.backend.execute(chunk, wid)
+        w = self._by_wid[wid]
+        w.tasks_done += chunk.size
+        self.by_worker[wid] = self.by_worker.get(wid, 0) + chunk.size
+        return payload
+
+    def _stats(self, t_par: float, hung: bool) -> EngineStats:
+        P = len(self.workers)
+        busy = np.array([w.busy for w in self.workers])
+        idle = np.zeros(P)
+        if not math.isinf(t_par) and not hung:
+            for i, w in enumerate(self.workers):
+                end = min(t_par, w.fail_time if w.fail_time is not None
+                          else t_par)
+                idle[i] = max(0.0, end - w.busy)
+        q = self.queue
+        return EngineStats(
+            t_virtual=t_par, hung=hung, n_tasks=q.N,
+            n_finished=q.n_finished, n_assignments=q.n_assignments,
+            n_duplicates=q.n_duplicates, wasted_tasks=q.wasted_tasks,
+            by_worker=dict(self.by_worker), worker_busy=busy,
+            worker_idle=idle,
+            survivors=[w.wid for w in self.workers if w.alive],
+            assignment_log=list(self.assignment_log))
+
+    # ---------------------------------------------------- virtual-time mode
+    def run(self) -> EngineStats:
+        """Deterministic virtual-time event loop (the simulator's heart,
+        now shared by every driver)."""
+        queue = self.queue
+        workers = self._by_wid
+        h = self.h
+        master_free = 0.0
+        t_done = math.inf
+        fruitless = 0
+        inflight = 0     # COMPLETE/REP_ARRIVE events guaranteed to arrive
+        counter = itertools.count()          # heap tie-break
+
+        # (time, tiebreak, kind, wid, chunk, payload)
+        heap: list = [(0.0, next(counter), REQUEST, w.wid, None, None)
+                      for w in self.workers]
+        heapq.heapify(heap)
+
+        def assign(wid: int, t_master: float) -> bool:
+            """Master (busy until t_master) assigns work to ``wid``.
+            Returns True iff an assignment was made."""
+            nonlocal master_free, inflight
+            w = workers[wid]
+            c = queue.request(wid)
+            if c is None:
+                if queue.done:
+                    return False
+                if queue.wait_hint == "barrier" or queue.rdlb_enabled:
+                    # batch-weight barrier (clears when reports arrive —
+                    # poll again, with or without rDLB) or rDLB duplicate
+                    # cap.  Poll interval bounded below in absolute terms
+                    # so idle workers cannot flood the event queue during
+                    # a long stall.
+                    poll = max(100 * h, 0.02)
+                    heapq.heappush(heap, (t_master + poll, next(counter),
+                                          REQUEST, wid, None, None))
+                # else: non-robust + all scheduled: worker blocks forever
+                # (paper Fig. 1b)
+                return False
+            self.assignment_log.append(c)
+            if w.fails_by_count():
+                w.alive = False               # dies holding the chunk
+                return True
+            reply_at = t_master + w.msg_latency   # chunk reaches worker
+            done_at = reply_at + self.backend.cost(c, wid) / w.speed
+            if w.fail_time is not None and done_at >= w.fail_time:
+                w.alive = False               # dies mid-chunk
+                return True
+            payload = self._execute(c, wid)
+            w.busy += done_at - reply_at
+            inflight += 1
+            heapq.heappush(heap, (done_at, next(counter), COMPLETE,
+                                  wid, c, payload))
+            return True
+
+        hung = False
+        while heap:
+            t, _, kind, wid, chunk, payload = heapq.heappop(heap)
+            if t > self.horizon or fruitless > self.max_fruitless_polls:
+                hung = True
+                break
+            w = workers[wid]
+
+            if kind == REQUEST:                        # worker-side send
+                if not w.alive_at(t):
+                    w.alive = False
+                    continue
+                heapq.heappush(heap, (t + w.msg_latency, next(counter),
+                                      REQ_ARRIVE, wid, None, None))
+            elif kind == COMPLETE:                     # worker finished
+                # (death mid-chunk is filtered at assign time)
+                heapq.heappush(heap, (t + w.msg_latency, next(counter),
+                                      REP_ARRIVE, wid, chunk, payload))
+            elif kind == REQ_ARRIVE:                   # master transaction
+                start = max(t, master_free)
+                master_free = start + h
+                if assign(wid, start + h):
+                    fruitless = 0
+                elif inflight == 0:
+                    # No completion can ever arrive: only repeated polls
+                    # (barrier-miss escalation) could still make progress.
+                    fruitless += 1
+            else:                                      # REP_ARRIVE
+                start = max(t, master_free)
+                master_free = start + h
+                inflight -= 1
+                newly = queue.report_tasks(chunk)
+                self.backend.commit(chunk, wid, payload, newly)
+                compute = self.backend.cost(chunk, chunk.pe)
+                compute /= workers[chunk.pe].speed
+                self._feedback(chunk, compute, 2 * w.msg_latency + h)
+                if newly:
+                    fruitless = 0
+                if queue.done and newly:
+                    t_done = start + h         # master sees the last task
+                    break                      # MPI_Abort analogue
+                # DLS4LB piggybacks the next work request on the result
+                # message: the same master transaction assigns the next
+                # chunk.  (Count-based fail-stop triggers INSIDE assign —
+                # the worker receives the chunk and dies holding it.)
+                if w.alive_at(start + h):
+                    assign(wid, start + h)
+
+        done = queue.done and not hung
+        t_par = t_done if done else math.inf
+        return self._stats(t_par, not done)
+
+    # ------------------------------------------------------- threaded mode
+    def run_threaded(self, *, poll: float = 1e-3,
+                     stall_timeout: float = 5.0) -> EngineStats:
+        """Real concurrency: one thread per worker; duplicates race in
+        wall-clock time and first-completion-wins is physical.
+
+        ``stall_timeout``: seconds a worker may poll fruitlessly (no
+        global queue progress) before giving up — the Fig.-1b hang
+        surfaced in finite time.
+        """
+        queue = self.queue
+        t0 = time.monotonic()
+        errors: list[BaseException] = []
+
+        def progress_mark() -> tuple:
+            return (queue.n_finished, queue.n_assignments)
+
+        def worker_loop(w: EngineWorker) -> None:
+            last_progress = progress_mark()
+            stall_start = None
+            while True:
+                if queue.done:
+                    return
+                chunk = queue.request(w.wid)
+                if chunk is None:
+                    if queue.done:
+                        return
+                    # NOTE: don't consult queue.wait_hint here — it is a
+                    # shared scratch field another thread's request() may
+                    # clobber; derive the barrier state directly.
+                    if (not queue.rdlb_enabled
+                            and queue.all_scheduled
+                            and not queue.at_batch_barrier):
+                        return        # non-robust: would block forever
+                    mark = progress_mark()
+                    if mark != last_progress:
+                        last_progress, stall_start = mark, None
+                    elif stall_start is None:
+                        stall_start = time.monotonic()
+                    elif time.monotonic() - stall_start > stall_timeout:
+                        return        # livelock (e.g. capped dup on a
+                                      # dead worker): surface the hang
+                    time.sleep(poll)
+                    continue
+                stall_start = None
+                with self._commit_lock:
+                    self.assignment_log.append(chunk)
+                if w.fails_by_count():
+                    w.alive = False   # dies holding the chunk
+                    return
+                t_exec0 = time.monotonic()
+                payload = self._execute(chunk, w.wid)
+                if w.sleep_per_task > 0.0:
+                    time.sleep(w.sleep_per_task * chunk.size)
+                w.busy += time.monotonic() - t_exec0
+                with self._commit_lock:
+                    newly = queue.report_tasks(chunk)
+                    self.backend.commit(chunk, w.wid, payload, newly)
+                    self._feedback(chunk, time.monotonic() - t_exec0, 0.0)
+
+        def guarded(w: EngineWorker) -> None:
+            try:
+                worker_loop(w)
+            except BaseException as e:      # surface after join — don't
+                errors.append(e)            # misreport as a Fig.-1b hang
+
+        threads = [threading.Thread(target=guarded, args=(w,),
+                                    daemon=True)
+                   for w in self.workers if w.alive]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+        wall = time.monotonic() - t0
+        hung = not queue.done
+        return self._stats(math.inf if hung else wall, hung)

@@ -44,6 +44,12 @@ class Chunk:
     pe: int                 # PE the assignment was made to
     seq: int                # global assignment sequence number
     duplicate: bool = False  # True iff this is an rDLB re-assignment
+    origin_seq: int = -1     # seq of the ORIGINAL chunk this duplicates
+                             # (== seq for originals)
+
+    def __post_init__(self):
+        if self.origin_seq < 0:
+            object.__setattr__(self, "origin_seq", self.seq)
 
     @property
     def stop(self) -> int:
@@ -216,7 +222,7 @@ class RobustQueue:
             cand = self._by_seq[seq]
             self._dup_count[seq] = self._dup_count.get(seq, 0) + 1
             dup = Chunk(cand.start, cand.size, pe, self._seq,
-                        duplicate=True)
+                        duplicate=True, origin_seq=seq)
             self._seq += 1
             self.n_assignments += 1
             self.n_duplicates += 1
@@ -229,23 +235,45 @@ class RobustQueue:
         Idempotent: tasks already FINISHED (a duplicate raced us) are
         counted as wasted work, not double-finished.
         """
+        return len(self.report_tasks(chunk))
+
+    def report_tasks(self, chunk: Chunk) -> list[int]:
+        """Like ``report`` but returns the NEWLY-finished task ids.
+
+        The engine layer needs the ids (not just the count) to commit
+        backend results exactly-once: a duplicate's payload is applied
+        only for tasks its report won.
+        """
         with self._lock:
-            newly = 0
+            newly: list[int] = []
             for i in chunk.tasks():
                 if self.flags[i] != Flag.FINISHED:
                     self.flags[i] = Flag.FINISHED
-                    newly += 1
+                    newly.append(i)
                     owner = self._task_owner[i]
                     if owner >= 0:
                         self._chunk_left[owner] -= 1
                 else:
                     self.wasted_tasks += 1
-            self._n_finished += newly
+            self._n_finished += len(newly)
             if chunk.duplicate:
-                c = self._dup_count.get(chunk.seq)
+                # Free the duplicate slot under the ORIGINAL chunk's seq —
+                # that is the key _reissue incremented.  (Decrementing
+                # under the duplicate's own seq leaked the slot, so
+                # max_duplicates caps never freed.)
+                c = self._dup_count.get(chunk.origin_seq)
                 if c:
-                    self._dup_count[chunk.seq] = c - 1
+                    self._dup_count[chunk.origin_seq] = c - 1
             return newly
+
+    def record_feedback(self, chunk: Chunk, compute_time: float,
+                        sched_time: float) -> None:
+        """Feed a completed chunk's measurements to the technique under
+        the queue lock — ``request`` mutates/reads technique state under
+        the same lock, so adaptive weights never see torn updates."""
+        with self._lock:
+            self.technique.record(chunk.pe, chunk.size,
+                                  compute_time, sched_time)
 
     # ------------------------------------------------------------- metrics
     def stats(self) -> dict:
@@ -260,22 +288,18 @@ class RobustQueue:
 
 def run_to_completion(queue: RobustQueue, pes: Sequence[int],
                       max_rounds: int = 10**7) -> list[Chunk]:
-    """Drain ``queue`` with round-robin synchronous PEs (test helper).
+    """Drain ``queue`` with synchronous unit-cost PEs (test helper).
 
-    Returns the assignment log.  Raises if the queue cannot finish (e.g.
+    A trivial backend of the unified engine (repro.core.engine): chunks
+    cost their size in virtual seconds and execution is a no-op.  Returns
+    the assignment log.  Raises if the queue cannot finish (e.g.
     rdlb_enabled=False and a chunk is never reported).
     """
-    log: list[Chunk] = []
-    rounds = 0
-    while not queue.done:
-        progressed = False
-        for pe in pes:
-            chunk = queue.request(pe)
-            if chunk is not None:
-                queue.report(chunk)
-                log.append(chunk)
-                progressed = True
-        rounds += 1
-        if not progressed or rounds > max_rounds:
-            raise RuntimeError("queue stalled (non-robust hang?)")
-    return log
+    from repro.core import engine  # engine imports rdlb; import lazily
+    workers = [engine.EngineWorker(pe) for pe in pes]
+    eng = engine.Engine(queue, workers, engine.WorkerBackend(),
+                        h=0.0, horizon=float(max_rounds))
+    stats = eng.run()
+    if stats.hung:
+        raise RuntimeError("queue stalled (non-robust hang?)")
+    return stats.assignment_log

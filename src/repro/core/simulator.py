@@ -6,10 +6,13 @@ the central RobustQueue; the master (PE 0, which also computes, as in
 DLS4LB) serializes scheduling transactions with overhead ``h``; failures
 drop in-flight chunks; perturbations slow PEs or delay their messages.
 
-Causality is exact: events (work requests, completion reports) are processed
-in global time order through a heap, so an rDLB duplicate is only issued if,
-at that instant, the original chunk is still unfinished.  The queue object is
-the same code the real JAX executor drives (repro.core.rdlb.RobustQueue).
+The simulator is now a thin shell over the unified engine
+(repro.core.engine): its backend executes nothing — only nominal task
+costs matter — and the engine's virtual-time event loop provides exact
+causality (an rDLB duplicate is only issued if, at that instant, the
+original chunk is still unfinished).  The SAME engine loop drives the
+real JAX executors (repro.runtime), so simulated and executed schedules
+cannot diverge: same (technique, scenario, seed) -> same assignment log.
 
 Without rDLB and with a failure/hang, the execution never terminates —
 reported as ``t_par = inf`` (the paper's "would wait indefinitely").
@@ -18,21 +21,12 @@ reported as ``t_par = inf`` (the paper's "would wait indefinitely").
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 import math
 from typing import Optional
 
 import numpy as np
 
-from repro.core import dls, faults, rdlb
-
-# Event kinds.  *_ARRIVE are master-side (message already in flight —
-# processed even if the sender died after sending); REQUEST/COMPLETE are
-# PE-side.  Master transactions are serialized with overhead h and see the
-# queue state AT ARRIVAL TIME (a perturbed PE's delayed message must not
-# block healthy PEs — the master is only busy for h per transaction).
-REQUEST, REQ_ARRIVE, COMPLETE, REP_ARRIVE = 0, 1, 2, 3
+from repro.core import dls, engine, faults, rdlb
 
 
 @dataclasses.dataclass
@@ -58,6 +52,26 @@ class SimResult:
         return self.wasted_tasks / max(1, self.n_tasks)
 
 
+class SimBackend(engine.WorkerBackend):
+    """Timing-only backend: execution is a no-op; cost is the chunk's
+    nominal task time (prefix sums over ``task_times``)."""
+
+    def __init__(self, task_times: np.ndarray) -> None:
+        self._ctime = np.cumsum(np.concatenate([[0.0], task_times]))
+
+    def cost(self, chunk: rdlb.Chunk, wid: int) -> float:
+        return float(self._ctime[chunk.stop] - self._ctime[chunk.start])
+
+
+def workers_from_scenario(scenario: faults.Scenario
+                          ) -> list[engine.EngineWorker]:
+    """Map a paper scenario (Table 1) onto engine worker liveness."""
+    return [engine.EngineWorker(pe, speed=p.speed,
+                                msg_latency=p.msg_latency,
+                                fail_time=p.fail_time)
+            for pe, p in enumerate(scenario.profiles)]
+
+
 def simulate(task_times: np.ndarray,
              technique: dls.Technique,
              scenario: faults.Scenario,
@@ -66,162 +80,56 @@ def simulate(task_times: np.ndarray,
              h: float = 1e-4,
              max_duplicates: Optional[int] = None,
              horizon: float = 1e7,
-             queue_cls: type = rdlb.RobustQueue) -> SimResult:
+             queue_cls: type = rdlb.RobustQueue,
+             backend: Optional[engine.WorkerBackend] = None) -> SimResult:
     """Run one DLS execution and return its timing/robustness metrics.
 
     task_times[i]: nominal execution time of task i on an unperturbed PE.
     h:             master scheduling overhead per transaction (seconds).
-    queue_cls:     RobustQueue subclass (adaptive feedback wiring).
+    queue_cls:     RobustQueue subclass (custom queue wiring).
+    backend:       override the timing-only backend — inject a
+                   real-executing backend (e.g. runtime.backends.FnBackend
+                   over the same costs) to EXECUTE the schedule the
+                   simulator would produce, event for event.
     """
     N = len(task_times)
-    P = scenario.P
-    prof = scenario.profiles
     queue = queue_cls(N, technique, rdlb_enabled=rdlb_enabled,
                       max_duplicates=max_duplicates)
-    ctime = np.cumsum(np.concatenate([[0.0], task_times]))  # prefix sums
-
-    def chunk_time(c: rdlb.Chunk, pe: int) -> float:
-        return float(ctime[c.stop] - ctime[c.start]) / prof[pe].speed
-
-    master_free = 0.0
-    t_done = math.inf
-    pe_busy = np.zeros(P)
-    pe_dead = np.zeros(P, dtype=bool)
-    counter = itertools.count()   # heap tie-break
-
-    # (time, tiebreak, kind, pe, chunk)
-    heap: list = [(0.0, next(counter), REQUEST, pe, None) for pe in range(P)]
-    heapq.heapify(heap)
-
-    def pe_alive_at(pe: int, t: float) -> bool:
-        ft = prof[pe].fail_time
-        return ft is None or t < ft
-
-    def assign(pe: int, t_master: float) -> None:
-        """Master (already busy until t_master) assigns work to pe."""
-        nonlocal master_free
-        c = queue.request(pe)
-        if c is None:
-            if queue.done:
-                return
-            if queue.wait_hint == "barrier" or queue.rdlb_enabled:
-                # batch-weight barrier (clears when reports arrive — poll
-                # again, with or without rDLB) or rDLB duplicate cap.
-                # Poll interval bounded below in absolute terms so that a
-                # fleet of idle PEs cannot flood the event queue during a
-                # long (seconds) stall.
-                poll = max(100 * h, 0.02)
-                heapq.heappush(heap, (t_master + poll, next(counter),
-                                      REQUEST, pe, None))
-            # else: non-robust + all scheduled: PE blocks forever (Fig. 1b)
-            return
-        reply_at = t_master + prof[pe].msg_latency     # chunk reaches PE
-        done_at = reply_at + chunk_time(c, pe)
-        ft = prof[pe].fail_time
-        if ft is not None and done_at >= ft:
-            pe_dead[pe] = True                         # dies mid-chunk
-            return
-        pe_busy[pe] += done_at - reply_at
-        heapq.heappush(heap, (done_at, next(counter), COMPLETE, pe, c))
-
-    while heap:
-        t, _, kind, pe, chunk = heapq.heappop(heap)
-        if t > horizon:
-            break
-
-        if kind == REQUEST:                            # PE-side send
-            if not pe_alive_at(pe, t):
-                pe_dead[pe] = True
-                continue
-            heapq.heappush(heap, (t + prof[pe].msg_latency, next(counter),
-                                  REQ_ARRIVE, pe, None))
-        elif kind == COMPLETE:                         # PE finished chunk
-            # (death mid-chunk is filtered at assign time)
-            heapq.heappush(heap, (t + prof[pe].msg_latency, next(counter),
-                                  REP_ARRIVE, pe, chunk))
-        elif kind == REQ_ARRIVE:                       # master transaction
-            start = max(t, master_free)
-            master_free = start + h
-            assign(pe, start + h)
-        else:                                          # REP_ARRIVE
-            start = max(t, master_free)
-            master_free = start + h
-            newly = queue.report(chunk)
-            if queue.done and newly > 0:
-                t_done = start + h                     # master sees last task
-                break                                  # MPI_Abort analogue
-            # DLS4LB piggybacks the next work request on the result
-            # message: same master transaction assigns the next chunk.
-            if pe_alive_at(pe, start + h):
-                assign(pe, start + h)
-
-    t_par = t_done if queue.done else math.inf
-    idle = np.zeros(P)
-    if not math.isinf(t_par):
-        for pe in range(P):
-            end = min(t_par, prof[pe].fail_time or t_par)
-            idle[pe] = max(0.0, end - pe_busy[pe])
+    eng = engine.Engine(queue, workers_from_scenario(scenario),
+                        backend or SimBackend(task_times),
+                        h=h, horizon=horizon)
+    st = eng.run()
     return SimResult(
-        t_par=t_par,
-        n_finished=queue.n_finished,
+        t_par=st.t_virtual,
+        n_finished=st.n_finished,
         n_tasks=N,
-        n_assignments=queue.n_assignments,
-        n_duplicates=queue.n_duplicates,
-        wasted_tasks=queue.wasted_tasks,
-        pe_busy=pe_busy,
-        pe_idle=idle,
+        n_assignments=st.n_assignments,
+        n_duplicates=st.n_duplicates,
+        wasted_tasks=st.wasted_tasks,
+        pe_busy=st.worker_busy,
+        pe_idle=st.worker_idle,
         technique=technique.name,
         scenario=scenario.name,
         rdlb=rdlb_enabled,
     )
 
 
-def simulate_adaptive(task_times: np.ndarray,
-                      technique_name: str,
-                      scenario: faults.Scenario,
-                      *, rdlb_enabled: bool = True, h: float = 1e-4,
-                      seed: int = 0,
-                      max_duplicates: Optional[int] = None) -> SimResult:
-    """Like ``simulate`` but wires measured chunk times back into the
-    technique (the adaptive AWF-*/AF feedback loop).
-
-    The measurement hook mirrors DLS4LB: on every completion report the
-    master records (chunk size, compute time, scheduling time) for the
-    reporting PE.
-    """
-    N = len(task_times)
-    P = scenario.P
-    technique = dls.make_technique(technique_name, N, P, seed=seed)
-    # Chunk compute times are deterministic given the assignment, so the
-    # feedback hook lives on the queue's report path (as in DLS4LB, where
-    # the master timestamps each chunk's completion).
-    ctime = np.cumsum(np.concatenate([[0.0], task_times]))
-
-    class FeedbackQueue(rdlb.RobustQueue):
-        def report(self, chunk: rdlb.Chunk) -> int:
-            newly = super().report(chunk)
-            dt = float(ctime[chunk.stop] - ctime[chunk.start])
-            dt /= scenario.profiles[chunk.pe].speed
-            sched = 2 * scenario.profiles[chunk.pe].msg_latency + h
-            technique.record(chunk.pe, chunk.size, dt, sched)
-            return newly
-
-    return simulate(task_times, technique, scenario,
-                    rdlb_enabled=rdlb_enabled, h=h,
-                    max_duplicates=max_duplicates, queue_cls=FeedbackQueue)
-
-
 def run(task_times: np.ndarray, technique_name: str,
         scenario: faults.Scenario, *, rdlb_enabled: bool = True,
         h: float = 1e-4, seed: int = 0,
         max_duplicates: Optional[int] = None) -> SimResult:
-    """Entry point: builds the technique (with feedback when adaptive)."""
-    if technique_name in dls.ADAPTIVE_TECHNIQUES:
-        return simulate_adaptive(task_times, technique_name, scenario,
-                                 rdlb_enabled=rdlb_enabled, h=h, seed=seed,
-                                 max_duplicates=max_duplicates)
+    """Entry point: builds the technique by name.
+
+    Adaptive techniques (AWF-*/AF) need no special wiring any more: the
+    engine records chunk feedback — (size, compute time, scheduling
+    time), DLS4LB's chunk-granularity hook — on every completion report.
+    """
     technique = dls.make_technique(technique_name, len(task_times),
                                    scenario.P, seed=seed)
     return simulate(task_times, technique, scenario,
                     rdlb_enabled=rdlb_enabled, h=h,
                     max_duplicates=max_duplicates)
+
+
+# API-compat alias: the adaptive path no longer differs from run().
+simulate_adaptive = run

@@ -22,9 +22,11 @@ ICI_BW = 50e9                  # B/s per link
 
 
 def _mesh(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    if hasattr(jax.sharding, "AxisType"):    # newer jax: explicit Auto
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)        # older jax: Auto is implied
 
 
 def make_production_mesh(*, multi_pod: bool = False):

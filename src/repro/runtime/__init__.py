@@ -1,6 +1,9 @@
+from repro.runtime.backends import (  # noqa: F401
+    FnBackend, ServeBackend, TrainBackend,
+)
 from repro.runtime.executor import (  # noqa: F401
     FaultPlan, RDLBTrainExecutor, StepResult, WorkerState,
 )
 from repro.runtime.serve_executor import (  # noqa: F401
-    RDLBServeExecutor, Request,
+    RDLBServeExecutor, Request, ServeStats,
 )

@@ -3,8 +3,10 @@
 One global training step = N independent TASKS (grad-accumulation
 microbatches, each a fixed-shape jitted computation over a slice of the
 global batch).  Tasks are self-scheduled to WORKERS (data-parallel worker
-groups; simulated in-process on CPU) through the SAME ``RobustQueue`` the
-discrete-event simulator drives:
+groups; simulated in-process on CPU) through the SAME unified engine
+(repro.core.engine) the discrete-event simulator drives — this executor
+only supplies a ``TrainBackend`` (microbatch gradients, exactly-once
+reduction):
 
   * a free worker requests work; the DLS technique sizes its chunk of tasks;
   * with rDLB, once every task is assigned, idle workers receive DUPLICATES
@@ -30,11 +32,12 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import dls, rdlb
+from repro.core.engine import Engine, EngineWorker
 from repro.data import chunk_batch
 from repro.optim import apply_updates, clip_by_global_norm, make_optimizer
+from repro.runtime.backends import TrainBackend
 
 
 @dataclasses.dataclass
@@ -87,6 +90,10 @@ class RDLBTrainExecutor:
     exact_accumulation: store per-task grads and reduce in task order —
                  bit-identical results regardless of schedule (used by the
                  equality tests); False accumulates in arrival order.
+    concurrent:  run workers as real OS threads (duplicates genuinely race
+                 in wall-clock time) instead of the deterministic
+                 virtual-time loop.  Gradients are identical either way
+                 when exact_accumulation is on.
     """
 
     def __init__(self, model, *, n_workers: int = 4, n_tasks: int = 8,
@@ -94,7 +101,8 @@ class RDLBTrainExecutor:
                  optimizer: str = "adamw", lr: float = 1e-3,
                  grad_clip: float = 1.0, exact_accumulation: bool = False,
                  max_duplicates: Optional[int] = None,
-                 loss_fn: Optional[Callable] = None):
+                 loss_fn: Optional[Callable] = None,
+                 concurrent: bool = False):
         self.model = model
         self.n_workers = n_workers
         self.n_tasks = n_tasks
@@ -102,6 +110,7 @@ class RDLBTrainExecutor:
         self.rdlb_enabled = rdlb_enabled
         self.exact_accumulation = exact_accumulation
         self.max_duplicates = max_duplicates
+        self.concurrent = concurrent
         self.opt = make_optimizer(optimizer, lr=lr)
         self.grad_clip = grad_clip
         base_loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
@@ -134,85 +143,32 @@ class RDLBTrainExecutor:
         queue = rdlb.RobustQueue(self.n_tasks, technique,
                                  rdlb_enabled=self.rdlb_enabled,
                                  max_duplicates=self.max_duplicates)
-        done = np.zeros(self.n_tasks, dtype=bool)
-        per_task: dict[int, Any] = {}
-        grad_acc = None
-        loss_sum, n_done = 0.0, 0
-        tasks_by_worker: dict[int, int] = {}
-        hung = False
-        rounds = 0
-        stalled_rounds = 0
-        while not queue.done:
-            progressed = False
-            for w in self.workers:
-                if not w.alive:
-                    continue
-                w.credit += w.speed
-                while w.credit >= 1.0 and not queue.done:
-                    w.credit -= 1.0
-                    chunk = queue.request(w.wid)
-                    if chunk is None:
-                        break
-                    # fail-stop mid-chunk: assigned but never reported
-                    if (w.fail_after_tasks is not None
-                            and w.tasks_done >= w.fail_after_tasks):
-                        w.alive = False
-                        break
-                    for t in chunk.tasks():
-                        loss, grads = self._grad_fn(
-                            params, self._task_batch(batch, t))
-                        w.tasks_done += 1
-                        tasks_by_worker[w.wid] = \
-                            tasks_by_worker.get(w.wid, 0) + 1
-                        if done[t]:
-                            continue                    # duplicate: discard
-                        done[t] = True
-                        n_done += 1
-                        loss_sum += float(loss)
-                        if self.exact_accumulation:
-                            per_task[t] = grads
-                        elif grad_acc is None:
-                            grad_acc = jax.tree_util.tree_map(
-                                lambda g: g.astype(jnp.float32), grads)
-                        else:
-                            grad_acc = jax.tree_util.tree_map(
-                                lambda a, g: a + g.astype(jnp.float32),
-                                grad_acc, grads)
-                    compute_time = float(chunk.size)
-                    technique.record(w.wid, chunk.size, compute_time)
-                    queue.report(chunk)
-                    progressed = True
-            rounds += 1
-            # A barrier wait (AWF-B/D weight collection) clears via rDLB
-            # duplicate reports after 1-2 polls: allow a short grace window
-            # before declaring the paper's Fig. 1b hang.
-            stalled_rounds = 0 if progressed else stalled_rounds + 1
-            if stalled_rounds > 8 or rounds > max_rounds:
-                hung = True                 # paper Fig. 1b: would wait forever
-                break
+        backend = TrainBackend(
+            lambda t: self._grad_fn(params, self._task_batch(batch, t)),
+            exact_accumulation=self.exact_accumulation)
+        eworkers = [EngineWorker(w.wid, speed=w.speed, alive=w.alive,
+                                 fail_after_tasks=w.fail_after_tasks,
+                                 tasks_done=w.tasks_done)
+                    for w in self.workers]
+        eng = Engine(queue, eworkers, backend, h=0.0,
+                     horizon=float(max_rounds))
+        stats = eng.run_threaded() if self.concurrent else eng.run()
+        for w, ew in zip(self.workers, eworkers):   # liveness flows back
+            w.alive, w.tasks_done = ew.alive, ew.tasks_done
 
-        if self.exact_accumulation and per_task:
-            grad_acc = None
-            for t in sorted(per_task):      # fixed reduction order
-                g = per_task[t]
-                if grad_acc is None:
-                    grad_acc = jax.tree_util.tree_map(
-                        lambda x: x.astype(jnp.float32), g)
-                else:
-                    grad_acc = jax.tree_util.tree_map(
-                        lambda a, x: a + x.astype(jnp.float32), grad_acc, g)
-
-        if hung or grad_acc is None:
+        grad_acc = backend.reduced()
+        if stats.hung or grad_acc is None:
             return StepResult(params, opt_state, float("nan"), True,
                               self.n_tasks, queue.n_duplicates,
-                              queue.wasted_tasks, tasks_by_worker,
+                              queue.wasted_tasks, dict(stats.by_worker),
                               [w.wid for w in self.alive_workers])
 
         grads = jax.tree_util.tree_map(lambda g: g / self.n_tasks, grad_acc)
         grads, _ = clip_by_global_norm(grads, self.grad_clip)
         updates, opt_state = self.opt.update(grads, opt_state, params)
         params = apply_updates(params, updates)
-        return StepResult(params, opt_state, loss_sum / max(1, n_done),
+        return StepResult(params, opt_state,
+                          backend.loss_sum / max(1, backend.n_done),
                           False, self.n_tasks, queue.n_duplicates,
-                          queue.wasted_tasks, tasks_by_worker,
+                          queue.wasted_tasks, dict(stats.by_worker),
                           [w.wid for w in self.alive_workers])

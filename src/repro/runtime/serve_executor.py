@@ -1,24 +1,39 @@
 """rDLB serving executor: robust continuous batching.
 
 Tasks = inference REQUESTS (prompt -> generate k tokens).  Workers are
-model replicas.  The same RobustQueue schedules requests; with rDLB, once
-every request is assigned, idle replicas DUPLICATE in-flight requests of
-stragglers/failed replicas — first completion wins (greedy decode is
-deterministic, so duplicates are interchangeable).  This is the paper's
-idle-tail insight applied to serving: P99 latency under a slow/failed
-replica collapses to ~P50 because the tail is re-executed elsewhere.
+model replicas.  The same unified engine (repro.core.engine) schedules
+requests through the RobustQueue; with rDLB, once every request is
+assigned, idle replicas DUPLICATE in-flight requests of stragglers/failed
+replicas — first completion wins (greedy decode is deterministic, so
+duplicates are interchangeable).  This is the paper's idle-tail insight
+applied to serving: P99 latency under a slow/failed replica collapses to
+~P50 because the tail is re-executed elsewhere.
+
+Two performance layers on top of the shared engine:
+
+  * BATCHED DECODE (``batch_decode=True``): a chunk's requests are grouped
+    by (prompt length, max_new_tokens) and each group decodes as ONE
+    padded, jitted batch call — (B, 1) tokens through ``decode_step`` —
+    instead of a per-request Python token loop.  The batch dimension is
+    padded up to a power of two so jit recompiles stay bounded.
+  * CONCURRENT MODE (``concurrent=True``): replicas run as real OS
+    threads; rDLB duplicates genuinely race their originals in wall-clock
+    time, and first-completion-wins is physical rather than an artifact
+    of round-robin ordering.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dls, rdlb
+from repro.core.engine import Engine, EngineWorker
+from repro.runtime.backends import ServeBackend
 
 
 @dataclasses.dataclass
@@ -40,41 +55,89 @@ class ServeStats:
     by_worker: dict
 
 
+def _pad_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 class RDLBServeExecutor:
     def __init__(self, model, params, *, n_workers: int = 2,
                  technique: str = "SS", rdlb_enabled: bool = True,
-                 max_duplicates: Optional[int] = None):
+                 max_duplicates: Optional[int] = None,
+                 batch_decode: bool = True,
+                 concurrent: bool = False):
         self.model = model
         self.params = params
         self.n_workers = n_workers
         self.technique_name = technique
         self.rdlb_enabled = rdlb_enabled
         self.max_duplicates = max_duplicates
+        self.batch_decode = batch_decode
+        self.concurrent = concurrent
         self._decode = jax.jit(model.decode_step)
         self.dead: set[int] = set()
-        self.slow: dict[int, float] = {}
+        self.slow: dict[int, float] = {}      # wid -> extra s per request
 
     def fail_worker(self, wid: int) -> None:
         self.dead.add(wid)
 
+    # ------------------------------------------------------------- decode
     def _generate(self, req: Request) -> np.ndarray:
-        """Greedy decode (deterministic => duplicates interchangeable)."""
-        S = len(req.prompt)
-        total = S + req.max_new_tokens
-        cache = self.model.init_cache(1, total)
-        toks = list(req.prompt)
-        logits = None
+        """Greedy decode, one request at a time (the pre-batching path,
+        kept as the ``batch_decode=False`` baseline)."""
+        out = self._generate_group(req.prompt[None, :], req.max_new_tokens)
+        return out[0]
+
+    def _generate_group(self, prompts: np.ndarray,
+                        max_new: int) -> np.ndarray:
+        """Greedy-decode a (B, S) group of equal-length prompts as one
+        padded jitted batch: B is padded to a power of two (bounded jit
+        recompiles); pad rows replicate row 0 and are discarded.
+
+        Rows are independent through attention/cache, so batched decode
+        is interchangeable with the per-request loop."""
+        B, S = prompts.shape
+        Bp = _pad_pow2(B)
+        total = S + max_new
+        toks = np.empty((Bp, total), dtype=np.int32)
+        toks[:B, :S] = prompts
+        toks[B:, :S] = prompts[0]
+        cache = self.model.init_cache(Bp, total)
         for pos in range(total - 1):
-            tok = jnp.asarray([[toks[pos]]], dtype=jnp.int32)
+            tok = jnp.asarray(toks[:, pos:pos + 1])
             logits, cache = self._decode(self.params, cache, tok,
                                          jnp.int32(pos))
             if pos >= S - 1:
-                toks.append(int(jnp.argmax(logits[0, -1])))
-        return np.asarray(toks[S:], dtype=np.int32)
+                toks[:, pos + 1] = np.asarray(
+                    jnp.argmax(logits[:, -1, :], axis=-1), dtype=np.int32)
+        return toks[:B, S:]
 
+    def _generate_chunk(self, reqs: list[Request]) -> dict:
+        """Decode a chunk of requests -> {rid: tokens}.
+
+        Batched mode groups by (prompt_len, max_new_tokens) — each group
+        is one padded batch call; singleton shapes fall out naturally."""
+        if not self.batch_decode:
+            return {r.rid: self._generate(r) for r in reqs}
+        groups: dict[tuple, list[Request]] = {}
+        for r in reqs:
+            groups.setdefault((len(r.prompt), r.max_new_tokens),
+                              []).append(r)
+        out: dict[int, np.ndarray] = {}
+        for (S, max_new), rs in groups.items():
+            prompts = np.stack([r.prompt for r in rs]).astype(np.int32)
+            toks = self._generate_group(prompts, max_new)
+            for r, t in zip(rs, toks):
+                out[r.rid] = t
+        return out
+
+    # -------------------------------------------------------------- serve
     def serve(self, requests: list[Request],
               *, fail_at: Optional[dict] = None,
-              max_rounds: int = 100000) -> ServeStats:
+              max_rounds: int = 100000,
+              concurrent: Optional[bool] = None) -> ServeStats:
         """Process a batch of requests; fail_at: {wid: after_n_requests}."""
         N = len(requests)
         technique = dls.make_technique(self.technique_name, N,
@@ -83,35 +146,21 @@ class RDLBServeExecutor:
                                  rdlb_enabled=self.rdlb_enabled,
                                  max_duplicates=self.max_duplicates)
         fail_at = fail_at or {}
-        done_count = {w: 0 for w in range(self.n_workers)}
-        by_worker: dict[int, int] = {}
-        hung = False
-        rounds = 0
-        while not queue.done:
-            progressed = False
-            for wid in range(self.n_workers):
-                if wid in self.dead:
-                    continue
-                chunk = queue.request(wid)
-                if chunk is None:
-                    continue
-                if wid in fail_at and done_count[wid] >= fail_at[wid]:
-                    self.dead.add(wid)      # dies holding the chunk
-                    continue
-                for rid in chunk.tasks():
-                    req = requests[rid]
-                    out = self._generate(req)
-                    done_count[wid] += 1
-                    by_worker[wid] = by_worker.get(wid, 0) + 1
-                    if req.output is None:
-                        req.output = out
-                        req.completed_by = wid
-                        req.duplicated = chunk.duplicate
-                queue.report(chunk)
-                progressed = True
-            rounds += 1
-            if not progressed or rounds > max_rounds:
-                hung = True
-                break
-        return ServeStats(N, queue.n_duplicates, queue.wasted_tasks, hung,
-                          by_worker)
+        backend = ServeBackend(requests, self._generate_chunk)
+        # self.slow (extra seconds per request) maps to BOTH modes: a real
+        # sleep in threaded mode, and a speed divisor in virtual time
+        # (nominal cost is 1 virtual second per request).
+        eworkers = [EngineWorker(wid, alive=wid not in self.dead,
+                                 fail_after_tasks=fail_at.get(wid),
+                                 speed=1.0 / (1.0 + self.slow.get(wid, 0.0)),
+                                 sleep_per_task=self.slow.get(wid, 0.0))
+                    for wid in range(self.n_workers)]
+        eng = Engine(queue, eworkers, backend, h=0.0,
+                     horizon=float(max_rounds))
+        threaded = self.concurrent if concurrent is None else concurrent
+        stats = eng.run_threaded() if threaded else eng.run()
+        for ew in eworkers:                 # fail-stops persist
+            if not ew.alive:
+                self.dead.add(ew.wid)
+        return ServeStats(N, queue.n_duplicates, queue.wasted_tasks,
+                          stats.hung, dict(stats.by_worker))

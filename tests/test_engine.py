@@ -1,0 +1,216 @@
+"""Unified-engine tests: sim/exec parity, schedule-invariant gradients,
+batched-decode equivalence, threaded concurrency, and the duplicate-count
+bookkeeping regression."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dls, engine, faults, rdlb, simulator
+from repro.data import batch_for_step
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.runtime import RDLBServeExecutor, RDLBTrainExecutor, Request
+from repro.runtime.backends import FnBackend
+
+CFG = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=128)
+
+
+def chunk_key(c):
+    return (c.start, c.size, c.pe, c.seq, c.duplicate, c.origin_seq)
+
+
+# --------------------------------------------------------- sim/exec parity
+@pytest.mark.parametrize("technique", ["SS", "FAC", "GSS", "AWF-B", "AF"])
+def test_sim_and_exec_backends_identical_schedule(technique):
+    """THE SimAS property: the simulator and a really-executing backend
+    drive the same engine loop, so the same (technique, scenario, seed)
+    produces the same assignment log, event for event — even under a
+    straggler + fail-stop scenario."""
+    N, P = 64, 4
+    tt = np.abs(np.random.default_rng(0).normal(0.05, 0.02, N)) + 1e-3
+    sc = faults.Scenario("parity", [
+        faults.PEProfile(),
+        faults.PEProfile(speed=0.25),          # straggler
+        faults.PEProfile(fail_time=0.5),       # fail-stop
+        faults.PEProfile(msg_latency=0.05),    # latency-perturbed
+    ])
+
+    def run_with(backend):
+        tech = dls.make_technique(technique, N, P, seed=3)
+        queue = rdlb.RobustQueue(N, tech)
+        eng = engine.Engine(queue, simulator.workers_from_scenario(sc),
+                            backend, h=1e-4)
+        return eng.run()
+
+    executed = FnBackend(task_fn=lambda t: t * t, task_times=tt)
+    st_sim = run_with(simulator.SimBackend(tt))
+    st_exec = run_with(executed)
+    assert not st_sim.hung and not st_exec.hung
+    assert ([chunk_key(c) for c in st_sim.assignment_log]
+            == [chunk_key(c) for c in st_exec.assignment_log])
+    assert st_sim.t_virtual == pytest.approx(st_exec.t_virtual)
+    assert st_sim.n_duplicates == st_exec.n_duplicates
+    # ... and the executing backend really computed every task, once
+    assert executed.results == {t: t * t for t in range(N)}
+
+
+def test_run_to_completion_is_engine_backed():
+    q = rdlb.RobustQueue(12, dls.make_technique("FAC", 12, 3))
+    log = rdlb.run_to_completion(q, range(3))
+    assert q.done and q.n_finished == 12
+    covered = sorted(t for c in log if not c.duplicate for t in c.tasks())
+    assert covered == list(range(12))
+
+
+def test_run_to_completion_raises_on_nonrobust_stall():
+    q = rdlb.RobustQueue(4, dls.make_technique("SS", 4, 2),
+                         rdlb_enabled=False)
+    held = q.request(0)                       # never reported: Fig. 1b
+    assert held is not None
+    with pytest.raises(RuntimeError):
+        rdlb.run_to_completion(q, [1])
+
+
+# ----------------------------------------------- dup-count leak regression
+def test_duplicate_slot_frees_on_report():
+    """Regression: ``_reissue`` counts the duplicate under the ORIGINAL
+    chunk's seq; ``report`` must decrement the same key (it used to
+    decrement under the duplicate's own seq, leaking the slot)."""
+    q = rdlb.RobustQueue(2, dls.make_technique("SS", 2, 3),
+                         max_duplicates=1)
+    c0 = q.request(0)
+    c1 = q.request(0)                         # PE 0 holds both tasks
+    dup = q.request(1)
+    assert dup.duplicate and dup.origin_seq == c0.seq
+    assert q._dup_count[c0.seq] == 1
+    q.report(dup)                             # duplicate completes
+    assert q._dup_count[c0.seq] == 0          # slot freed under origin seq
+    q.report(c0)                              # late original: wasted
+    assert q._dup_count[c0.seq] == 0          # no double-free / underflow
+    q.report(c1)
+    assert q.done
+    assert all(v >= 0 for v in q._dup_count.values())
+
+
+def test_late_duplicate_report_decrements_origin():
+    """Original wins; the WASTED duplicate's report must still free its
+    slot under the origin seq (no stale live-duplicate accounting)."""
+    q = rdlb.RobustQueue(1, dls.make_technique("SS", 1, 2),
+                         max_duplicates=2)
+    c0 = q.request(0)
+    d0 = q.request(1)
+    assert q._dup_count[c0.seq] == 1
+    q.report(c0)                              # original first
+    q.report(d0)                              # duplicate wasted
+    assert q.wasted_tasks == 1
+    assert q._dup_count[c0.seq] == 0
+
+
+# ------------------------------------------------- schedule-invariant step
+@pytest.fixture(scope="module")
+def train_setup():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = batch_for_step(CFG, 0, 8, 16)
+    return model, params, batch
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def test_train_step_schedule_invariant(train_setup):
+    """exact_accumulation: the update is bit-identical no matter how the
+    engine schedules the microbatches (workers, technique, concurrency)."""
+    model, params, batch = train_setup
+    results = []
+    for kw in (dict(n_workers=1, technique="SS"),
+               dict(n_workers=4, technique="FAC"),
+               dict(n_workers=3, technique="GSS"),
+               dict(n_workers=4, technique="FAC", concurrent=True)):
+        ex = RDLBTrainExecutor(model, n_tasks=8, exact_accumulation=True,
+                               **kw)
+        opt_state = ex.opt.init(params)
+        res = ex.train_step(params, opt_state, batch)
+        assert not res.hung
+        results.append(res)
+    for other in results[1:]:
+        assert trees_equal(results[0].params, other.params)
+        assert results[0].loss == pytest.approx(other.loss, abs=1e-9)
+
+
+# --------------------------------------------------------- serving parity
+@pytest.fixture(scope="module")
+def serve_setup():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, CFG.vocab_size, size=6).astype(np.int32)
+               for _ in range(10)]
+    return model, params, prompts
+
+
+def make_requests(prompts):
+    return [Request(i, p, max_new_tokens=3) for i, p in enumerate(prompts)]
+
+
+def test_batched_decode_matches_per_request(serve_setup):
+    """One padded jitted batch call per chunk == the per-request token
+    loop, token for token (rows are independent through the cache)."""
+    model, params, prompts = serve_setup
+    a = make_requests(prompts)
+    b = make_requests(prompts)
+    # GSS -> multi-request chunks -> real batching (and batch-dim padding)
+    RDLBServeExecutor(model, params, n_workers=2, technique="GSS",
+                      batch_decode=True).serve(a)
+    RDLBServeExecutor(model, params, n_workers=2, technique="GSS",
+                      batch_decode=False).serve(b)
+    for x, y in zip(a, b):
+        assert x.output is not None and np.array_equal(x.output, y.output)
+
+
+def test_concurrent_serve_first_completion_wins(serve_setup):
+    """Threaded mode: duplicates genuinely race; a straggler + fail-stop
+    replica still yields complete, deterministic outputs."""
+    model, params, prompts = serve_setup
+    ref = make_requests(prompts)
+    RDLBServeExecutor(model, params, n_workers=1).serve(ref)
+    reqs = make_requests(prompts)
+    ex = RDLBServeExecutor(model, params, n_workers=3, technique="SS",
+                           concurrent=True)
+    ex.slow[0] = 0.02                        # straggler replica
+    stats = ex.serve(reqs, fail_at={1: 1})   # fail-stop replica
+    assert not stats.hung
+    assert 1 in ex.dead
+    for x, y in zip(reqs, ref):
+        assert x.output is not None and np.array_equal(x.output, y.output)
+
+
+def test_concurrent_serve_hang_without_rdlb(serve_setup):
+    model, params, prompts = serve_setup
+    reqs = make_requests(prompts[:4])
+    ex = RDLBServeExecutor(model, params, n_workers=2, technique="SS",
+                           rdlb_enabled=False, concurrent=True)
+    stats = ex.serve(reqs, fail_at={1: 0})
+    assert stats.hung
+
+
+# ------------------------------------------------------------ stats shape
+def test_engine_stats_coherent():
+    N, P = 32, 4
+    tt = np.full(N, 0.01)
+    sc = faults.failures(P, 1, t_exec_estimate=N * 0.01 / P, seed=0)
+    tech = dls.make_technique("FAC", N, P)
+    queue = rdlb.RobustQueue(N, tech)
+    eng = engine.Engine(queue, simulator.workers_from_scenario(sc),
+                        simulator.SimBackend(tt), h=1e-4)
+    st = eng.run()
+    assert not st.hung and st.n_finished == N
+    assert st.n_assignments == len(st.assignment_log)
+    assert st.n_duplicates == sum(c.duplicate for c in st.assignment_log)
+    assert sum(st.by_worker.values()) >= N
+    assert (st.worker_busy >= 0).all() and (st.worker_idle >= -1e-9).all()

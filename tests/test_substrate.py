@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import SyntheticTokens, batch_for_step, chunk_batch
 from repro.checkpoint import (CheckpointManager, load_checkpoint,
@@ -163,8 +163,11 @@ def test_rules_resolution():
 
 
 def test_rules_divisibility_fallback():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if hasattr(jax.sharding, "AxisType"):     # newer jax
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
     rules = AxisRules(make_rules())
     # 7 not divisible by model size 1? size-1 axes always divide: kept
     spec = rules.spec(("heads",), (7,), mesh)
