@@ -4,4 +4,7 @@
 #   scripts/ci.sh -m "not slow"     # skip long-running tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+python -m compileall -q src
+python benchmarks/fig_adaptive.py --dry-run
+python -m pytest -x -q "$@"

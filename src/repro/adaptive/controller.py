@@ -1,0 +1,206 @@
+"""Controller: watch a live engine run, re-plan the remainder, hot-swap.
+
+The engine calls two duck-typed hooks (no import cycle — the engine never
+imports this package):
+
+  * ``bind(engine)`` once at run start — resets per-run state and, with
+    ``plan_at_start``, makes an initial SimAS-style selection before the
+    first chunk is sized;
+  * ``on_report(engine, t)`` after every master report transaction — the
+    decision cadence (every k chunks and/or every d virtual seconds)
+    triggers a re-plan here, BEFORE the piggybacked next assignment, so a
+    swap takes effect on the very next chunk.
+
+A re-plan snapshots the run (repro.adaptive.snapshot), forecasts every
+portfolio candidate plus the incumbent over the remainder
+(repro.adaptive.forecaster), and — if the best candidate beats the
+incumbent by more than ``hysteresis`` — swaps the queue's technique and
+rDLB knobs in place.  The swap preserves exactly-once task accounting by
+construction: ``RobustQueue.swap_technique`` never touches task flags or
+duplicate bookkeeping, and the incoming technique is pre-warmed with the
+learned per-PE measurements so adaptive techniques do not restart cold.
+
+In threaded mode ``on_report`` is called OUTSIDE the engine's commit
+lock (a forecast sweep must not stall other workers' commits), so the
+controller serializes re-plans itself: the cadence counter is updated
+under a small lock and at most one thread runs a sweep at a time —
+late-comers skip rather than queue up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.adaptive.forecaster import Candidate, DEFAULT_PORTFOLIO, sweep
+from repro.adaptive.snapshot import capture
+from repro.core import dls
+
+
+@dataclasses.dataclass
+class AdaptiveConfig:
+    """Knobs for the adaptive policy.
+
+    decision_every_chunks: re-plan after this many completion reports
+        (None disables the chunk-count cadence).
+    decision_every_time:   re-plan when this much virtual time (wall time
+        in threaded mode) has passed since the last decision (None
+        disables the time cadence).
+    plan_at_start:  make an initial selection at t=0 (SimAS: simulate
+        before executing, then keep watching).
+    max_decisions:  total re-plans per run (forecast-cost bound).
+    min_remaining:  skip mid-run re-plans when fewer unfinished tasks
+        remain (the tail is cheaper to finish than to re-plan).
+    hysteresis:     swap only if the best candidate's predicted T_par is
+        at least this fraction below the incumbent's.
+    max_sim_tasks:  forecast coarsening cap (None = exact remainder).
+    prewarm:        seed candidate techniques with learned PE stats.
+    forecast_h:     master overhead for forecasts (None = engine's h).
+    """
+    portfolio: tuple = DEFAULT_PORTFOLIO
+    decision_every_chunks: Optional[int] = 64
+    decision_every_time: Optional[float] = None
+    plan_at_start: bool = True
+    max_decisions: int = 8
+    min_remaining: int = 64
+    hysteresis: float = 0.05
+    max_sim_tasks: Optional[int] = 2048
+    prewarm: bool = True
+    forecast_h: Optional[float] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class DecisionRecord:
+    """One re-planning decision (kept on the controller and surfaced via
+    ``EngineStats.adaptive_decisions``)."""
+    t: float
+    n_remaining: int
+    predictions: dict           # candidate label -> predicted T_par
+    incumbent: str              # label of the technique/knobs before
+    chosen: str                 # label after (== incumbent if no swap)
+    swapped: bool
+
+
+class AdaptiveController:
+    """Simulation-in-the-loop technique selection with mid-run hot-swap.
+
+    ``task_times`` are the nominal per-task costs the forecaster
+    simulates over; None means unit-cost tasks (the executors' model,
+    where a task is a microbatch or a request), resolved to
+    ``np.ones(N)`` at bind time.  One controller instance may be reused
+    across runs — ``bind`` resets all per-run state.
+    """
+
+    def __init__(self, task_times: Optional[Sequence[float]] = None,
+                 config: Optional[AdaptiveConfig] = None) -> None:
+        self.config = config or AdaptiveConfig()
+        self.task_times = (None if task_times is None
+                           else np.asarray(task_times, dtype=float))
+        self.decisions: list[DecisionRecord] = []
+        self._tt: Optional[np.ndarray] = None
+        self._reports = 0
+        self._next_t: Optional[float] = None
+        self._lock = threading.Lock()
+        self._replanning = False
+
+    # -------------------------------------------------------- engine hooks
+    def bind(self, engine) -> None:
+        cfg = self.config
+        self.decisions = []
+        self._reports = 0
+        self._replanning = False
+        self._next_t = (cfg.decision_every_time
+                        if cfg.decision_every_time is not None else None)
+        self._tt = (self.task_times if self.task_times is not None
+                    else np.ones(engine.queue.N))
+        if len(self._tt) != engine.queue.N:
+            raise ValueError(
+                f"controller has {len(self._tt)} task times for a "
+                f"{engine.queue.N}-task queue")
+        if cfg.plan_at_start:
+            self.replan(engine, 0.0)
+
+    def on_report(self, engine, t: float) -> None:
+        cfg = self.config
+        with self._lock:
+            self._reports += 1
+            due = (cfg.decision_every_chunks is not None
+                   and self._reports >= cfg.decision_every_chunks)
+            if (cfg.decision_every_time is not None
+                    and self._next_t is not None and t >= self._next_t):
+                due = True
+            if (not due or len(self.decisions) >= cfg.max_decisions
+                    or self._replanning):
+                return
+            self._reports = 0
+            if cfg.decision_every_time is not None:
+                self._next_t = t + cfg.decision_every_time
+            self._replanning = True
+        try:
+            self.replan(engine, t)
+        finally:
+            with self._lock:
+                self._replanning = False
+
+    # ----------------------------------------------------------- re-planning
+    @staticmethod
+    def incumbent_candidate(queue) -> Candidate:
+        return Candidate(queue.technique.name, queue.max_duplicates,
+                         queue.barrier_max_duplicates)
+
+    def replan(self, engine, t: float) -> Optional[DecisionRecord]:
+        """Snapshot -> portfolio forecast -> (maybe) hot-swap."""
+        cfg = self.config
+        snap = capture(engine, t)
+        n_remaining = snap.n_remaining
+        if n_remaining == 0 or (self.decisions
+                                and n_remaining < cfg.min_remaining):
+            return None
+        incumbent = self.incumbent_candidate(engine.queue)
+        portfolio = tuple(cfg.portfolio)
+        if incumbent not in portfolio:
+            portfolio += (incumbent,)
+        h = cfg.forecast_h if cfg.forecast_h is not None else engine.h
+        preds = sweep(snap, self._tt, portfolio, h=h, seed=cfg.seed,
+                      max_sim_tasks=cfg.max_sim_tasks,
+                      prewarm=cfg.prewarm)
+        by_cand = dict(preds)
+        best, best_t = preds[0]
+        inc_t = by_cand[incumbent]
+        swapped = False
+        if (best != incumbent and math.isfinite(best_t)
+                and (not math.isfinite(inc_t)
+                     or best_t < inc_t * (1.0 - cfg.hysteresis))):
+            self._swap(engine, best, n_remaining)
+            swapped = True
+        rec = DecisionRecord(
+            t=t, n_remaining=n_remaining,
+            predictions={c.label: p for c, p in preds},
+            incumbent=incumbent.label,
+            chosen=best.label if swapped else incumbent.label,
+            swapped=swapped)
+        self.decisions.append(rec)
+        return rec
+
+    def _swap(self, engine, cand: Candidate, n_remaining: int) -> None:
+        """Hot-swap the queue's technique/knobs for the remainder.
+
+        The new technique is sized for the remaining work but keeps the
+        FULL worker numbering (its stats are indexed by original wid —
+        dead workers simply never request), and inherits the incumbent's
+        learned measurements.
+        """
+        old = engine.queue.technique
+        tech = dls.make_technique(cand.technique, max(1, n_remaining),
+                                  len(engine.workers),
+                                  seed=self.config.seed, h=engine.h)
+        if self.config.prewarm:
+            tech.adopt_stats(old.stats)
+        engine.queue.swap_technique(
+            tech, max_duplicates=cand.max_duplicates,
+            barrier_max_duplicates=cand.barrier_max_duplicates)

@@ -1,0 +1,152 @@
+"""Forecaster: resume the discrete-event simulator from a snapshot.
+
+For each candidate in a portfolio of (DLS technique x rDLB knobs), build
+the *remainder* of the run — unfinished tasks, surviving workers at their
+current speed/latency — and run the exact engine loop over it to predict
+the remaining ``T_par``.  Because PR 1 made the simulator and the real
+executors share one engine, this prediction exercises the identical
+scheduling path the live run will take (the SimAS property).
+
+With ``max_sim_tasks=None`` a forecast is EXACTLY a fresh simulation of
+the remainder (asserted by tests/test_adaptive.py); setting it groups
+consecutive tasks into summed meta-tasks so a full portfolio sweep stays
+cheap enough to run in-loop (< 1s at P=256, N=8192 — see
+benchmarks/fig_adaptive.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.adaptive.snapshot import EngineSnapshot
+from repro.core import dls, faults, simulator
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One portfolio entry: a DLS technique plus rDLB knobs.
+
+    ``max_duplicates`` caps concurrent duplicates per chunk (duplication
+    aggressiveness); ``barrier_max_duplicates`` is the batch-weight
+    barrier damping cap (None = uncapped re-issue during AWF-B/D weight
+    collection).
+    """
+    technique: str
+    max_duplicates: Optional[int] = None
+    barrier_max_duplicates: Optional[int] = 1
+
+    @property
+    def label(self) -> str:
+        parts = [self.technique]
+        if self.max_duplicates is not None:
+            parts.append(f"dup{self.max_duplicates}")
+        if self.barrier_max_duplicates != 1:
+            b = ("inf" if self.barrier_max_duplicates is None
+                 else str(self.barrier_max_duplicates))
+            parts.append(f"bdup{b}")
+        return "+".join(parts)
+
+
+DEFAULT_PORTFOLIO: tuple = (
+    Candidate("FAC"),
+    Candidate("GSS"),
+    Candidate("mFSC"),
+    Candidate("AWF-C"),
+    Candidate("AF"),
+    Candidate("FAC", max_duplicates=2),
+    Candidate("AWF-B", barrier_max_duplicates=None),
+)
+
+
+def scenario_from_snapshot(snap: EngineSnapshot) -> faults.Scenario:
+    """Worker profiles as known at capture: survivors only, at their
+    current speed/latency.  Future fail-stops are unknowable and absent."""
+    profiles = [faults.PEProfile(speed=w.speed, msg_latency=w.msg_latency)
+                for w in snap.workers if w.alive]
+    if not profiles:                    # all dead: forecast degenerates
+        profiles = [faults.PEProfile()]
+    return faults.Scenario(f"resume@{snap.t:.4g}", profiles)
+
+
+def remaining_times(snap: EngineSnapshot,
+                    task_times: Sequence[float]) -> np.ndarray:
+    """Nominal times of the snapshot's unfinished tasks, in id order."""
+    tt = np.asarray(task_times, dtype=float)
+    if len(tt) != snap.n_tasks:
+        raise ValueError(f"task_times has {len(tt)} entries for a "
+                         f"{snap.n_tasks}-task snapshot")
+    return tt[np.asarray(snap.remaining, dtype=int)]
+
+
+def coarsen_times(times: np.ndarray,
+                  max_tasks: Optional[int]) -> np.ndarray:
+    """Group consecutive tasks into <= max_tasks meta-tasks (times sum),
+    bounding forecast cost while preserving total work and its spatial
+    variance structure."""
+    times = np.asarray(times, dtype=float)
+    if max_tasks is None or len(times) <= max_tasks:
+        return times
+    return np.array([g.sum() for g in np.array_split(times, max_tasks)])
+
+
+def forecast_candidate(snap: EngineSnapshot,
+                       task_times: Sequence[float],
+                       cand: Candidate, *,
+                       h: float = 1e-4,
+                       seed: int = 0,
+                       max_sim_tasks: Optional[int] = None,
+                       prewarm: bool = True,
+                       horizon: float = 1e7) -> float:
+    """Predicted remaining ``T_par`` if the run switched to ``cand`` now.
+
+    ``prewarm`` seeds the candidate technique with the snapshot's learned
+    per-PE measurements (renumbered to the survivors), so AWF-*/AF start
+    from what the run has already observed instead of cold.  Returns
+    ``inf`` if the forecast itself hangs.
+    """
+    rem = remaining_times(snap, task_times)
+    if len(rem) == 0:
+        return 0.0
+    times = coarsen_times(rem, max_sim_tasks)
+    sc = scenario_from_snapshot(snap)
+    tech = dls.make_technique(cand.technique, len(times), sc.P,
+                              seed=seed, h=h)
+    if prewarm:
+        alive_stats = [w.stats if w.stats is not None else dls.PEStats()
+                       for w in snap.workers if w.alive]
+        if alive_stats:
+            tech.adopt_stats(alive_stats,
+                             time_scale=len(rem) / len(times))
+    res = simulator.simulate(
+        times, tech, sc, h=h, horizon=horizon,
+        max_duplicates=cand.max_duplicates,
+        barrier_max_duplicates=cand.barrier_max_duplicates)
+    return float(res.t_par)
+
+
+def sweep(snap: EngineSnapshot, task_times: Sequence[float],
+          portfolio: Sequence[Candidate] = DEFAULT_PORTFOLIO,
+          **kw) -> list[tuple[Candidate, float]]:
+    """Forecast every candidate; returns [(candidate, predicted T_par)]
+    sorted best-first (hung forecasts rank last at inf)."""
+    preds = [(c, forecast_candidate(snap, task_times, c, **kw))
+             for c in portfolio]
+    preds.sort(key=lambda p: (p[1], p[0].label))
+    return preds
+
+
+def run_static(task_times: Sequence[float], scenario: faults.Scenario,
+               cand: Candidate, *, h: float = 1e-4, seed: int = 0,
+               horizon: float = 1e7) -> simulator.SimResult:
+    """Full static run of one candidate, start to finish — the oracle
+    baseline the adaptive policy is judged against."""
+    times = np.asarray(task_times, dtype=float)
+    tech = dls.make_technique(cand.technique, len(times), scenario.P,
+                              seed=seed, h=h)
+    return simulator.simulate(
+        times, tech, scenario, h=h, horizon=horizon,
+        max_duplicates=cand.max_duplicates,
+        barrier_max_duplicates=cand.barrier_max_duplicates)

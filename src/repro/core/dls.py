@@ -87,6 +87,23 @@ class PEStats:
             return 0.0
         return self.iters_done / t
 
+    def scaled_copy(self, time_scale: float = 1.0) -> "PEStats":
+        """Independent copy, optionally rescaling the per-iteration time.
+
+        ``time_scale`` > 1 re-expresses the measurements in a coarsened
+        task granularity (a meta-task of g original tasks runs ~g times
+        longer): the mean scales by g, the variance by g**2, and the
+        rate by 1/g — relative PE weights are invariant.
+        """
+        return PEStats(
+            iters_done=self.iters_done,
+            compute_time=self.compute_time * time_scale,
+            sched_time=self.sched_time,
+            n_samples=self.n_samples,
+            mean_iter_time=self.mean_iter_time * time_scale,
+            m2_iter_time=self.m2_iter_time * time_scale * time_scale,
+        )
+
 
 class Technique:
     """Base chunk-size calculator.
@@ -130,6 +147,17 @@ class Technique:
                sched_time: float = 0.0) -> None:
         """Feed back a completed chunk (adaptive techniques learn from it)."""
         self.stats[pe].record_chunk(size, compute_time, sched_time)
+
+    def adopt_stats(self, stats: list["PEStats"],
+                    time_scale: float = 1.0) -> None:
+        """Pre-warm per-PE measurements from a prior technique.
+
+        Used by mid-run technique hot-swap and by the simulator-resume
+        forecaster so AWF-*/AF do not restart cold.  Copies (never
+        aliases) up to ``self.P`` entries, in order.
+        """
+        for i in range(min(self.P, len(stats))):
+            self.stats[i] = stats[i].scaled_copy(time_scale)
 
     # ------------------------------------------------------ helpers
     def _chunk(self, pe: int, remaining: int) -> int:

@@ -128,6 +128,9 @@ class EngineStats:
     worker_idle: np.ndarray      # per-worker idle-before-termination seconds
     survivors: list              # wids alive at termination
     assignment_log: list         # every Chunk, in assignment order
+    adaptive_decisions: list = dataclasses.field(default_factory=list)
+                                 # DecisionRecords when an adaptive policy
+                                 # watched the run (repro.adaptive)
 
     @property
     def hang(self) -> bool:
@@ -150,6 +153,11 @@ class Engine:
     max_fruitless_polls: consecutive idle polls (no assignment, no new
               completion) before the run is declared livelocked/hung —
               surfaces Fig. 1b instead of spinning to the horizon.
+    adaptive: optional adaptive policy (duck-typed; see
+              repro.adaptive.AdaptiveController).  ``bind(engine)`` is
+              called once at run start, ``on_report(engine, t)`` after
+              every master report transaction — the policy may snapshot
+              the run and hot-swap the queue's technique/knobs there.
     """
 
     def __init__(self, queue: rdlb.RobustQueue,
@@ -158,13 +166,15 @@ class Engine:
                  h: float = 1e-4,
                  horizon: float = 1e7,
                  record_feedback: bool = True,
-                 max_fruitless_polls: Optional[int] = None) -> None:
+                 max_fruitless_polls: Optional[int] = None,
+                 adaptive: Any = None) -> None:
         self.queue = queue
         self.workers = workers
         self.backend = backend
         self.h = h
         self.horizon = horizon
         self.record_feedback = record_feedback
+        self.adaptive = adaptive
         P = len(workers)
         self._by_wid = {w.wid: w for w in workers}
         self.max_fruitless_polls = (max_fruitless_polls
@@ -204,7 +214,10 @@ class Engine:
             by_worker=dict(self.by_worker), worker_busy=busy,
             worker_idle=idle,
             survivors=[w.wid for w in self.workers if w.alive],
-            assignment_log=list(self.assignment_log))
+            assignment_log=list(self.assignment_log),
+            adaptive_decisions=(list(getattr(self.adaptive, "decisions",
+                                             ()))
+                                if self.adaptive is not None else []))
 
     # ---------------------------------------------------- virtual-time mode
     def run(self) -> EngineStats:
@@ -213,6 +226,8 @@ class Engine:
         queue = self.queue
         workers = self._by_wid
         h = self.h
+        if self.adaptive is not None:
+            self.adaptive.bind(self)       # may re-plan at t=0
         master_free = 0.0
         t_done = math.inf
         fruitless = 0
@@ -302,6 +317,11 @@ class Engine:
                 if queue.done and newly:
                     t_done = start + h         # master sees the last task
                     break                      # MPI_Abort analogue
+                if self.adaptive is not None:
+                    # Decision point: the policy may hot-swap the queue's
+                    # technique/knobs BEFORE the piggybacked assignment,
+                    # so the very next chunk is sized by the new plan.
+                    self.adaptive.on_report(self, start + h)
                 # DLS4LB piggybacks the next work request on the result
                 # message: the same master transaction assigns the next
                 # chunk.  (Count-based fail-stop triggers INSIDE assign —
@@ -326,6 +346,8 @@ class Engine:
         queue = self.queue
         t0 = time.monotonic()
         errors: list[BaseException] = []
+        if self.adaptive is not None:
+            self.adaptive.bind(self)       # may re-plan before threads run
 
         def progress_mark() -> tuple:
             return (queue.n_finished, queue.n_assignments)
@@ -372,6 +394,13 @@ class Engine:
                     newly = queue.report_tasks(chunk)
                     self.backend.commit(chunk, w.wid, payload, newly)
                     self._feedback(chunk, time.monotonic() - t_exec0, 0.0)
+                if self.adaptive is not None and not queue.done:
+                    # OUTSIDE the commit lock: a decision point may run a
+                    # whole forecast sweep, which must not stall other
+                    # workers' commits.  The controller serializes its
+                    # own re-plans; snapshot/swap take the queue lock
+                    # internally.  ``t`` is wall-clock seconds here.
+                    self.adaptive.on_report(self, time.monotonic() - t0)
 
         def guarded(w: EngineWorker) -> None:
             try:

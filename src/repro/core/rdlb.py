@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import threading
-from typing import Optional, Sequence
+from typing import Any, Optional, Sequence
 
 from repro.core import dls
 
@@ -265,6 +265,47 @@ class RobustQueue:
                 if c:
                     self._dup_count[chunk.origin_seq] = c - 1
             return newly
+
+    # ----------------------------------------------------- adaptive support
+    def snapshot_state(self) -> dict:
+        """Consistent point-in-time copy of the task accounting (for the
+        adaptive layer's mid-run snapshots).  Taken under the queue lock,
+        so neither the flag array nor the technique's learned stats
+        (mutated by ``record_feedback`` under the same lock) can be seen
+        mid-update.  ``stats`` are independent per-PE copies."""
+        with self._lock:
+            return dict(
+                flags=bytes(self.flags),
+                n_finished=self._n_finished,
+                next_unscheduled=self._next_unscheduled,
+                outstanding_duplicates=sum(
+                    v for v in self._dup_count.values() if v > 0),
+                technique=self.technique.name,
+                max_duplicates=self.max_duplicates,
+                barrier_max_duplicates=self.barrier_max_duplicates,
+                stats=[s.scaled_copy() for s in self.technique.stats],
+            )
+
+    _KEEP = object()          # sentinel: leave the knob unchanged
+
+    def swap_technique(self, technique: dls.Technique, *,
+                       max_duplicates: Any = _KEEP,
+                       barrier_max_duplicates: Any = _KEEP) -> None:
+        """Hot-swap the chunk-size calculator (and rDLB knobs) mid-run.
+
+        Exactly-once accounting is owned by the flag array and the
+        original-chunk bookkeeping, none of which is touched: in-flight
+        chunks complete (or get re-issued) exactly as before, and the new
+        technique only sizes FUTURE chunks.  Barrier-miss counters reset
+        because the incoming technique starts with clean batch state.
+        """
+        with self._lock:
+            self.technique = technique
+            if max_duplicates is not self._KEEP:
+                self.max_duplicates = max_duplicates
+            if barrier_max_duplicates is not self._KEEP:
+                self.barrier_max_duplicates = barrier_max_duplicates
+            self._barrier_waiters.clear()
 
     def record_feedback(self, chunk: Chunk, compute_time: float,
                         sched_time: float) -> None:

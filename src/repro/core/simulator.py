@@ -79,9 +79,11 @@ def simulate(task_times: np.ndarray,
              rdlb_enabled: bool = True,
              h: float = 1e-4,
              max_duplicates: Optional[int] = None,
+             barrier_max_duplicates: Optional[int] = 1,
              horizon: float = 1e7,
              queue_cls: type = rdlb.RobustQueue,
-             backend: Optional[engine.WorkerBackend] = None) -> SimResult:
+             backend: Optional[engine.WorkerBackend] = None,
+             adaptive=None) -> SimResult:
     """Run one DLS execution and return its timing/robustness metrics.
 
     task_times[i]: nominal execution time of task i on an unperturbed PE.
@@ -91,13 +93,17 @@ def simulate(task_times: np.ndarray,
                    real-executing backend (e.g. runtime.backends.FnBackend
                    over the same costs) to EXECUTE the schedule the
                    simulator would produce, event for event.
+    adaptive:      optional adaptive policy (repro.adaptive): snapshots
+                   the run at decision points and hot-swaps the
+                   technique/rDLB knobs for the remainder.
     """
     N = len(task_times)
     queue = queue_cls(N, technique, rdlb_enabled=rdlb_enabled,
-                      max_duplicates=max_duplicates)
+                      max_duplicates=max_duplicates,
+                      barrier_max_duplicates=barrier_max_duplicates)
     eng = engine.Engine(queue, workers_from_scenario(scenario),
                         backend or SimBackend(task_times),
-                        h=h, horizon=horizon)
+                        h=h, horizon=horizon, adaptive=adaptive)
     st = eng.run()
     return SimResult(
         t_par=st.t_virtual,

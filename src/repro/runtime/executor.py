@@ -94,6 +94,10 @@ class RDLBTrainExecutor:
                  in wall-clock time) instead of the deterministic
                  virtual-time loop.  Gradients are identical either way
                  when exact_accumulation is on.
+    adaptive:    optional adaptive policy (repro.adaptive
+                 .AdaptiveController): snapshots each step's engine run at
+                 decision points and hot-swaps the technique/rDLB knobs
+                 for the remainder (tasks are unit-cost microbatches).
     """
 
     def __init__(self, model, *, n_workers: int = 4, n_tasks: int = 8,
@@ -102,7 +106,8 @@ class RDLBTrainExecutor:
                  grad_clip: float = 1.0, exact_accumulation: bool = False,
                  max_duplicates: Optional[int] = None,
                  loss_fn: Optional[Callable] = None,
-                 concurrent: bool = False):
+                 concurrent: bool = False,
+                 adaptive: Optional[Any] = None):
         self.model = model
         self.n_workers = n_workers
         self.n_tasks = n_tasks
@@ -111,6 +116,7 @@ class RDLBTrainExecutor:
         self.exact_accumulation = exact_accumulation
         self.max_duplicates = max_duplicates
         self.concurrent = concurrent
+        self.adaptive = adaptive
         self.opt = make_optimizer(optimizer, lr=lr)
         self.grad_clip = grad_clip
         base_loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
@@ -151,7 +157,7 @@ class RDLBTrainExecutor:
                                  tasks_done=w.tasks_done)
                     for w in self.workers]
         eng = Engine(queue, eworkers, backend, h=0.0,
-                     horizon=float(max_rounds))
+                     horizon=float(max_rounds), adaptive=self.adaptive)
         stats = eng.run_threaded() if self.concurrent else eng.run()
         for w, ew in zip(self.workers, eworkers):   # liveness flows back
             w.alive, w.tasks_done = ew.alive, ew.tasks_done

@@ -25,7 +25,7 @@ Two performance layers on top of the shared engine:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +67,8 @@ class RDLBServeExecutor:
                  technique: str = "SS", rdlb_enabled: bool = True,
                  max_duplicates: Optional[int] = None,
                  batch_decode: bool = True,
-                 concurrent: bool = False):
+                 concurrent: bool = False,
+                 adaptive: Optional[Any] = None):
         self.model = model
         self.params = params
         self.n_workers = n_workers
@@ -76,6 +77,8 @@ class RDLBServeExecutor:
         self.max_duplicates = max_duplicates
         self.batch_decode = batch_decode
         self.concurrent = concurrent
+        self.adaptive = adaptive        # repro.adaptive policy (requests
+                                        # are unit-cost tasks)
         self._decode = jax.jit(model.decode_step)
         self.dead: set[int] = set()
         self.slow: dict[int, float] = {}      # wid -> extra s per request
@@ -156,7 +159,7 @@ class RDLBServeExecutor:
                                  sleep_per_task=self.slow.get(wid, 0.0))
                     for wid in range(self.n_workers)]
         eng = Engine(queue, eworkers, backend, h=0.0,
-                     horizon=float(max_rounds))
+                     horizon=float(max_rounds), adaptive=self.adaptive)
         threaded = self.concurrent if concurrent is None else concurrent
         stats = eng.run_threaded() if threaded else eng.run()
         for ew in eworkers:                 # fail-stops persist

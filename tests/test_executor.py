@@ -108,6 +108,45 @@ def test_elastic_shrink_and_rebalance(setup):
     assert 16 % n == 0 and n >= ex.n_workers
 
 
+def test_rebalance_terminates_when_workers_exceed_batch():
+    """Regression: global_batch=8, n_workers=12 used to loop forever
+    (no n >= 12 divides 8); now clamps to one row per task."""
+    assert rebalance_tasks(8, 12, 8) == 8
+    assert rebalance_tasks(16, 12, 8) == 8
+    # unchanged behaviour where the old code worked
+    assert rebalance_tasks(8, 3, 16) == 8
+    assert rebalance_tasks(5, 2, 16) == 8     # next divisor of 16 above 5
+    assert rebalance_tasks(1, 1, 7) == 1
+    with pytest.raises(ValueError):
+        rebalance_tasks(4, 4, 0)
+
+
+def test_shrink_carries_survivor_state(setup):
+    """Regression: shrink used to rebuild fresh WorkerState for
+    survivors, discarding observed speed and execution history that
+    adaptive policies (and AWF-style weights) prime from."""
+    model, params, batch = setup
+    ex = RDLBTrainExecutor(model, n_workers=4, n_tasks=8, technique="FAC",
+                           exact_accumulation=True)
+    opt_state = ex.opt.init(params)
+    res = ex.train_step(params, opt_state, batch,
+                        fault_plan=FaultPlan(fail_after={2: 0},
+                                             slow={0: 0.5}))
+    assert not res.hung
+    before = {w.wid: (w.speed, w.tasks_done)
+              for w in ex.workers if w.alive}
+    st = shrink_to_survivors(ex)
+    assert ex.n_workers == 3 and st.generation == 1
+    renumbering = st.history[-1]["renumbering"]
+    assert set(renumbering) == set(before)
+    for old_wid, new_wid in renumbering.items():
+        w = ex.workers[new_wid]
+        assert w.wid == new_wid and w.alive
+        assert (w.speed, w.tasks_done) == before[old_wid]
+    assert any(w.tasks_done > 0 for w in ex.workers)
+    assert any(w.speed == 0.5 for w in ex.workers)   # straggler observed
+
+
 def test_wasted_work_accounting(setup):
     model, params, batch = setup
     ex = RDLBTrainExecutor(model, n_workers=4, n_tasks=4, technique="SS",
