@@ -8,8 +8,9 @@ from pathlib import Path
 
 import numpy as np
 
+from repro import api
 from repro.apps import mandelbrot, psia
-from repro.core import dls, faults, simulator
+from repro.core import dls, faults
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -40,11 +41,24 @@ def scenarios(t_estimate: float, seed: int = 0):
     return sc
 
 
+def spec_for(technique: str, scenario, *, rdlb: bool = True,
+             seed: int = 0, h: float = 1e-4) -> api.RunSpec:
+    """One Table-1 grid cell as a declarative RunSpec — the benchmarks'
+    scenario vocabulary (serializable; the ``python -m repro`` CLI runs
+    the same cells from JSON)."""
+    return api.RunSpec(
+        scheduling=api.SchedulingSpec(technique=technique, seed=seed),
+        robustness=api.RobustnessSpec(rdlb_enabled=rdlb),
+        cluster=api.ClusterSpec.from_scenario(scenario),
+        execution=api.ExecutionSpec(h=h),
+        name=f"{scenario.name}/{technique}")
+
+
 def run_one(task_times, technique: str, scenario, *, rdlb: bool,
             seed: int = 0):
     t0 = time.time()
-    r = simulator.run(task_times, technique, scenario, rdlb_enabled=rdlb,
-                      seed=seed)
+    r = api.simulate(spec_for(technique, scenario, rdlb=rdlb, seed=seed),
+                     task_times)
     return r, time.time() - t0
 
 

@@ -3,15 +3,24 @@ under 1, P/2 and P-1 failures, relative to the most robust technique.
 
 Reads fig3 CSVs (runs fig3 if missing); writes fig4_<app>.csv:
     scenario, technique, rho_res   (1.0 = most robust, lower is better)
+
+The whole grid is also expressible as DATA: ``--emit-spec`` writes the
+(technique × {baseline, failure-scenario}) grid as a JSON RunSpec sweep,
+and ``python -m repro run --spec artifacts/bench/fig4_<scen>_<app>.spec.json``
+reproduces the ρ_res data points (seed-0 scenario instance) without any
+benchmark code.
 """
 
 from __future__ import annotations
 
 import csv
+import dataclasses
+import json
 from pathlib import Path
 
 from benchmarks import common
-from repro.core import robustness
+from repro import api
+from repro.core import faults, robustness
 
 
 def load_fig3(app: str):
@@ -44,6 +53,57 @@ def run():
     return out
 
 
+def emit_spec(out=None, *, app: str = "psia", scenario: str = "fail_1",
+              quick: bool = True, P: int = None, techniques=None,
+              seed: int = 0, task_times=None, workload: dict = None,
+              h: float = 1e-4) -> Path:
+    """Write one fig4 data-point grid as a JSON RunSpec sweep.
+
+    The file pairs every technique's baseline run with its run under
+    ``scenario``; ``python -m repro run --spec <file>`` then computes the
+    same FePIA ρ_res this module derives from fig3 CSVs (for the seed-0
+    scenario instance).  ``task_times``/``workload``/``P`` allow
+    small-scale grids (used by the tier-1 CLI test).
+    """
+    P = P or common.P
+    if task_times is None:
+        by_app = dict(common.apps(quick))
+        task_times = by_app[app]
+        workload = {"kind": app,
+                    "n": None if app == "psia" else len(task_times)}
+    assert workload is not None, "explicit task_times need a workload dict"
+    techniques = list(techniques or
+                      (t for t in common.TECHNIQUES if t != "STATIC"))
+    base_sc = faults.baseline(P)
+    t_est = api.simulate(common.spec_for("FAC", base_sc, h=h),
+                         task_times).t_par
+    scenarios = faults.paper_scenarios(P, t_exec_estimate=t_est, seed=seed)
+    sweep = []
+    for scen in ("baseline", scenario):
+        cluster = dataclasses.asdict(
+            api.ClusterSpec.from_scenario(scenarios[scen]))
+        for tech in techniques:
+            sweep.append({
+                "name": f"{scen}/{tech}",
+                "overrides": {"scheduling.technique": tech,
+                              "cluster": cluster}})
+    doc = {
+        "workload": workload,
+        "spec": common.spec_for("FAC", base_sc, seed=seed, h=h).to_dict(),
+        "sweep": sweep,
+        "metric": "resilience",
+        "baseline_scenario": "baseline",
+    }
+    if out is None:
+        common.ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        out = common.ARTIFACTS / f"fig4_{scenario}_{app}.spec.json"
+    out = Path(out)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return out
+
+
 def main(quick: bool = True):
     out_rows = run()
     lines = []
@@ -58,5 +118,19 @@ def main(quick: bool = True):
 
 
 if __name__ == "__main__":
-    for line in main():
-        print(line)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit-spec", action="store_true",
+                    help="write the fig4 grid as a JSON RunSpec sweep "
+                         "instead of running the benchmark")
+    ap.add_argument("--app", default="psia",
+                    choices=("psia", "mandelbrot"))
+    ap.add_argument("--scenario", default="fail_1")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.emit_spec:
+        path = emit_spec(args.out, app=args.app, scenario=args.scenario)
+        print(f"fig4,spec,{path}")
+    else:
+        for line in main():
+            print(line)

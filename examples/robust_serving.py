@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro import api
 from repro.models import build_model
 from repro.models.config import ModelConfig
 from repro.runtime import RDLBServeExecutor, Request
@@ -35,7 +36,8 @@ def main():
 
     print("healthy reference run (1 worker):")
     ref = make_requests(16, rng)
-    ex0 = RDLBServeExecutor(model, params, n_workers=1)
+    ex0 = RDLBServeExecutor(model, params,
+                            spec=api.serve_spec(n_workers=1))
     t0 = time.time()
     ex0.serve(ref)
     print(f"  served 16/16 in {time.time() - t0:.1f}s")
@@ -43,7 +45,8 @@ def main():
     print("4 replicas, replica 1 fails, rDLB on:")
     rng = np.random.default_rng(0)
     reqs = make_requests(16, rng)
-    ex = RDLBServeExecutor(model, params, n_workers=4, technique="SS")
+    spec = api.serve_spec(technique="SS", n_workers=4)  # scenario as data
+    ex = RDLBServeExecutor(model, params, spec=spec)
     t0 = time.time()
     stats = ex.serve(reqs, fail_at={1: 1})
     print(f"  served {sum(r.output is not None for r in reqs)}/16 in "
@@ -57,8 +60,8 @@ def main():
     print("same failure, rDLB OFF:")
     rng = np.random.default_rng(0)
     reqs2 = make_requests(16, rng)
-    ex2 = RDLBServeExecutor(model, params, n_workers=4, technique="SS",
-                            rdlb_enabled=False)
+    ex2 = RDLBServeExecutor(model, params, spec=spec.override(
+        "robustness.rdlb_enabled", False))
     stats2 = ex2.serve(reqs2, fail_at={1: 1})
     missing = sum(r.output is None for r in reqs2)
     print(f"  hung={stats2.hung}, {missing} requests never completed "

@@ -18,11 +18,12 @@ import time
 
 import jax
 
+from repro import api
 from repro.checkpoint import CheckpointManager
 from repro.data import batch_for_step
 from repro.models import build_model
 from repro.models.config import ModelConfig
-from repro.runtime import FaultPlan, RDLBTrainExecutor
+from repro.runtime import RDLBTrainExecutor
 from repro.runtime.elastic import shrink_to_survivors
 
 
@@ -49,19 +50,21 @@ def main():
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"model {cfg.name}: {n_params / 1e6:.1f}M params")
 
-    ex = RDLBTrainExecutor(model, n_workers=4, n_tasks=8, technique="FAC",
-                           optimizer="adamw", lr=3e-4)
+    spec = api.train_spec(technique="FAC", n_workers=4, n_tasks=8)
+    ex = RDLBTrainExecutor(model, spec=spec, optimizer="adamw", lr=3e-4)
     opt_state = ex.opt.init(params)
     ckpt = CheckpointManager(args.ckpt_dir, interval=5, keep=2)
 
     for step in range(args.steps):
         data = batch_for_step(cfg, step, batch, seq)
-        plan = None
         if step == 5:
-            plan = FaultPlan(fail_after={1: 0, 2: 1})
+            # inject fail-stops into the LIVE worker state (the unified
+            # WorkerSpec vocabulary: fail_after_tasks)
+            ex.workers[1].fail_after_tasks = 0
+            ex.workers[2].fail_after_tasks = 1
             print("step 5: killing workers 1 and 2 mid-step")
         t0 = time.time()
-        res = ex.train_step(params, opt_state, data, fault_plan=plan)
+        res = ex.train_step(params, opt_state, data)
         assert not res.hung
         params, opt_state = res.params, res.opt_state
         extra = (f" dups={res.n_duplicates}" if res.n_duplicates else "")

@@ -7,4 +7,18 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m compileall -q src
 python benchmarks/fig_adaptive.py --dry-run
+# spec-layer smokes: the facade, the CLI, and the examples cannot rot
+tmp_spec=$(mktemp /tmp/rdlb_spec_XXXXXX.json)
+python - "$tmp_spec" <<'PY'
+import sys
+import numpy as np
+from benchmarks import fig4_resilience
+fig4_resilience.emit_spec(
+    sys.argv[1], P=8, techniques=["SS", "FAC"],
+    task_times=np.full(64, 0.01),
+    workload={"kind": "uniform", "n": 64, "t": 0.01})
+PY
+python -m repro run --spec "$tmp_spec" --dry-run
+rm -f "$tmp_spec"
+python examples/quickstart.py > /dev/null
 python -m pytest -x -q "$@"

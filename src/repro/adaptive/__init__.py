@@ -46,12 +46,15 @@ def run_adaptive(task_times, scenario, *, initial: str = "FAC",
     """
     import numpy as np
 
-    from repro.core import dls, simulator
+    from repro import api
 
     config = config or AdaptiveConfig()
     ctrl = AdaptiveController(task_times=task_times, config=config)
-    technique = dls.make_technique(initial, len(task_times), scenario.P,
-                                   seed=seed, h=h)
-    result = simulator.simulate(np.asarray(task_times, dtype=float),
-                                technique, scenario, h=h, adaptive=ctrl)
+    spec = api.RunSpec(
+        scheduling=api.SchedulingSpec(technique=initial, seed=seed,
+                                      params=(("h", h),)),
+        cluster=api.ClusterSpec.from_scenario(scenario),
+        execution=api.ExecutionSpec(h=h))
+    result = api.simulate(spec, np.asarray(task_times, dtype=float),
+                          adaptive=ctrl)
     return result, ctrl

@@ -38,7 +38,6 @@ import numpy as np
 
 from repro.adaptive.forecaster import Candidate, DEFAULT_PORTFOLIO, sweep
 from repro.adaptive.snapshot import capture
-from repro.core import dls
 
 
 @dataclasses.dataclass
@@ -150,8 +149,11 @@ class AdaptiveController:
     # ----------------------------------------------------------- re-planning
     @staticmethod
     def incumbent_candidate(queue) -> Candidate:
-        return Candidate(queue.technique.name, queue.max_duplicates,
-                         queue.barrier_max_duplicates)
+        # A pure "stay" delta: the base spec the forecaster builds from
+        # the snapshot already carries the queue's current dup knobs, so
+        # the incumbent keeps every field (and compares equal to a plain
+        # Candidate(technique) portfolio entry).
+        return Candidate(queue.technique.name)
 
     def replan(self, engine, t: float) -> Optional[DecisionRecord]:
         """Snapshot -> portfolio forecast -> (maybe) hot-swap."""
@@ -190,17 +192,32 @@ class AdaptiveController:
     def _swap(self, engine, cand: Candidate, n_remaining: int) -> None:
         """Hot-swap the queue's technique/knobs for the remainder.
 
-        The new technique is sized for the remaining work but keeps the
-        FULL worker numbering (its stats are indexed by original wid —
-        dead workers simply never request), and inherits the incumbent's
-        learned measurements.
+        The candidate is a spec DELTA: it is applied to a spec describing
+        the queue's current state, and the resulting scheduling/
+        robustness sections drive the swap (other overridden sections —
+        e.g. execution — only affect forecasts; a live engine cannot
+        change its h mid-run).  The new technique is sized for the
+        remaining work but keeps the FULL worker numbering (its stats are
+        indexed by original wid — dead workers simply never request), and
+        inherits the incumbent's learned measurements.
         """
-        old = engine.queue.technique
-        tech = dls.make_technique(cand.technique, max(1, n_remaining),
-                                  len(engine.workers),
-                                  seed=self.config.seed, h=engine.h)
+        from repro import api
+        q = engine.queue
+        old = q.technique
+        incumbent = api.RunSpec(
+            scheduling=api.SchedulingSpec(technique=old.name,
+                                          seed=self.config.seed,
+                                          params=(("h", engine.h),)),
+            robustness=api.RobustnessSpec(
+                rdlb_enabled=q.rdlb_enabled,
+                max_duplicates=q.max_duplicates,
+                barrier_max_duplicates=q.barrier_max_duplicates),
+            cluster=api.ClusterSpec(n_workers=len(engine.workers)))
+        spec = cand.apply(incumbent)
+        tech = api.make_scheduler(spec, max(1, n_remaining))
         if self.config.prewarm:
             tech.adopt_stats(old.stats)
-        engine.queue.swap_technique(
-            tech, max_duplicates=cand.max_duplicates,
-            barrier_max_duplicates=cand.barrier_max_duplicates)
+        q.swap_technique(
+            tech, max_duplicates=spec.robustness.max_duplicates,
+            barrier_max_duplicates=spec.robustness.barrier_max_duplicates,
+            rdlb_enabled=spec.robustness.rdlb_enabled)

@@ -1,11 +1,18 @@
 """Forecaster: resume the discrete-event simulator from a snapshot.
 
-For each candidate in a portfolio of (DLS technique x rDLB knobs), build
-the *remainder* of the run — unfinished tasks, surviving workers at their
-current speed/latency — and run the exact engine loop over it to predict
-the remaining ``T_par``.  Because PR 1 made the simulator and the real
-executors share one engine, this prediction exercises the identical
-scheduling path the live run will take (the SimAS property).
+For each :class:`Candidate` — a *spec delta* (repro.api.spec) — build the
+*remainder* of the run as a RunSpec: unfinished tasks, surviving workers
+at their current speed/latency, the incumbent's rDLB knobs; apply the
+delta; and run the exact engine loop over it to predict the remaining
+``T_par``.  Because PR 1 made the simulator and the real executors share
+one engine, this prediction exercises the identical scheduling path the
+live run will take (the SimAS property).
+
+Candidates being spec deltas means the portfolio sweep can explore ANY
+spec field — ``Candidate("GSS")`` swaps the technique,
+``Candidate(max_duplicates=2)`` the duplication aggressiveness, and
+``Candidate(overrides=(("execution.h", 5e-3),))`` forecasts under a
+different master overhead — not just technique × dup-knobs.
 
 With ``max_sim_tasks=None`` a forecast is EXACTLY a fresh simulation of
 the remainder (asserted by tests/test_adaptive.py); setting it groups
@@ -16,49 +23,16 @@ benchmarks/fig_adaptive.py).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import api
 from repro.adaptive.snapshot import EngineSnapshot
+# Candidate became a RunSpec delta (repro.api.spec); re-exported here for
+# back-compat with the original portfolio vocabulary.
+from repro.api.spec import Candidate, DEFAULT_PORTFOLIO  # noqa: F401
 from repro.core import dls, faults, simulator
-
-
-@dataclasses.dataclass(frozen=True)
-class Candidate:
-    """One portfolio entry: a DLS technique plus rDLB knobs.
-
-    ``max_duplicates`` caps concurrent duplicates per chunk (duplication
-    aggressiveness); ``barrier_max_duplicates`` is the batch-weight
-    barrier damping cap (None = uncapped re-issue during AWF-B/D weight
-    collection).
-    """
-    technique: str
-    max_duplicates: Optional[int] = None
-    barrier_max_duplicates: Optional[int] = 1
-
-    @property
-    def label(self) -> str:
-        parts = [self.technique]
-        if self.max_duplicates is not None:
-            parts.append(f"dup{self.max_duplicates}")
-        if self.barrier_max_duplicates != 1:
-            b = ("inf" if self.barrier_max_duplicates is None
-                 else str(self.barrier_max_duplicates))
-            parts.append(f"bdup{b}")
-        return "+".join(parts)
-
-
-DEFAULT_PORTFOLIO: tuple = (
-    Candidate("FAC"),
-    Candidate("GSS"),
-    Candidate("mFSC"),
-    Candidate("AWF-C"),
-    Candidate("AF"),
-    Candidate("FAC", max_duplicates=2),
-    Candidate("AWF-B", barrier_max_duplicates=None),
-)
 
 
 def scenario_from_snapshot(snap: EngineSnapshot) -> faults.Scenario:
@@ -69,6 +43,23 @@ def scenario_from_snapshot(snap: EngineSnapshot) -> faults.Scenario:
     if not profiles:                    # all dead: forecast degenerates
         profiles = [faults.PEProfile()]
     return faults.Scenario(f"resume@{snap.t:.4g}", profiles)
+
+
+def base_spec_from_snapshot(snap: EngineSnapshot, *, h: float = 1e-4,
+                            seed: int = 0,
+                            horizon: float = 1e7) -> "api.RunSpec":
+    """The incumbent, as a RunSpec over the remainder: current technique
+    and rDLB knobs, surviving workers at observed conditions.  Candidate
+    deltas apply on top of this."""
+    return api.RunSpec(
+        scheduling=api.SchedulingSpec(technique=snap.technique, seed=seed,
+                                      params=(("h", h),)),
+        robustness=api.RobustnessSpec(
+            rdlb_enabled=snap.rdlb_enabled,
+            max_duplicates=snap.max_duplicates,
+            barrier_max_duplicates=snap.barrier_max_duplicates),
+        cluster=api.ClusterSpec.from_scenario(scenario_from_snapshot(snap)),
+        execution=api.ExecutionSpec(h=h, horizon=horizon))
 
 
 def remaining_times(snap: EngineSnapshot,
@@ -111,19 +102,16 @@ def forecast_candidate(snap: EngineSnapshot,
     if len(rem) == 0:
         return 0.0
     times = coarsen_times(rem, max_sim_tasks)
-    sc = scenario_from_snapshot(snap)
-    tech = dls.make_technique(cand.technique, len(times), sc.P,
-                              seed=seed, h=h)
+    spec = cand.apply(base_spec_from_snapshot(snap, h=h, seed=seed,
+                                              horizon=horizon))
+    tech = api.make_scheduler(spec, len(times))
     if prewarm:
         alive_stats = [w.stats if w.stats is not None else dls.PEStats()
                        for w in snap.workers if w.alive]
         if alive_stats:
             tech.adopt_stats(alive_stats,
                              time_scale=len(rem) / len(times))
-    res = simulator.simulate(
-        times, tech, sc, h=h, horizon=horizon,
-        max_duplicates=cand.max_duplicates,
-        barrier_max_duplicates=cand.barrier_max_duplicates)
+    res = api.simulate(spec, times, technique=tech)
     return float(res.t_par)
 
 
@@ -144,9 +132,9 @@ def run_static(task_times: Sequence[float], scenario: faults.Scenario,
     """Full static run of one candidate, start to finish — the oracle
     baseline the adaptive policy is judged against."""
     times = np.asarray(task_times, dtype=float)
-    tech = dls.make_technique(cand.technique, len(times), scenario.P,
-                              seed=seed, h=h)
-    return simulator.simulate(
-        times, tech, scenario, h=h, horizon=horizon,
-        max_duplicates=cand.max_duplicates,
-        barrier_max_duplicates=cand.barrier_max_duplicates)
+    base = api.RunSpec(
+        scheduling=api.SchedulingSpec(technique="FAC", seed=seed,
+                                      params=(("h", h),)),
+        cluster=api.ClusterSpec.from_scenario(scenario),
+        execution=api.ExecutionSpec(h=h, horizon=horizon))
+    return api.simulate(cand.apply(base), times)

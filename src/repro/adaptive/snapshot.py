@@ -54,6 +54,7 @@ class EngineSnapshot:
     max_duplicates: Optional[int]
     barrier_max_duplicates: Optional[int]
     workers: list[WorkerSnapshot]
+    rdlb_enabled: bool = True          # the queue's re-issue switch
 
     @property
     def n_remaining(self) -> int:
@@ -104,4 +105,5 @@ def capture(engine, t: float = 0.0) -> EngineSnapshot:
         max_duplicates=qs["max_duplicates"],
         barrier_max_duplicates=qs["barrier_max_duplicates"],
         workers=workers,
+        rdlb_enabled=qs.get("rdlb_enabled", True),
     )

@@ -1,0 +1,193 @@
+"""``python -m repro`` — run a simulation/benchmark from a JSON spec file.
+
+The scenario-as-data payoff: a run (or a whole benchmark grid) is a
+diffable JSON file, executed without writing any Python.
+
+File schema::
+
+    {
+      "workload": {"kind": "uniform", "n": 1024, "t": 0.01}
+                | {"kind": "normal",  "n": 1024, "mean": 0.01,
+                   "sd": 0.004, "seed": 0}
+                | {"kind": "psia", "n": null}          # null = paper N
+                | {"kind": "mandelbrot", "n": 16384},
+      "spec":   { ...RunSpec.to_dict()... },           # the base spec
+      "sweep":  [ {"name": "fail_1/FAC",
+                   "overrides": {"scheduling.technique": "FAC",
+                                 "cluster": {...ClusterSpec...}}}, ... ],
+      "metric": "t_par" | "resilience",
+      "baseline_scenario": "baseline"                  # for resilience
+    }
+
+``sweep`` is optional (absent = run the base spec once).  An override
+value may be a scalar (dotted-path ``spec.override``) or, for the
+section keys ``scheduling``/``robustness``/``cluster``/``execution``/
+``adaptive``, a full section dict.  With ``metric: "resilience"``,
+sweep entry names must be ``<scenario>/<technique>`` and the FePIA
+resilience ρ_res is computed per scenario against ``baseline_scenario``
+— exactly the ``benchmarks/fig4_resilience.py`` data points.
+
+Usage::
+
+    python -m repro run --spec runs/fig4_fail1.json [--dry-run] [--csv f]
+    python -m repro show --spec runs/fig4_fail1.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+import numpy as np
+
+from repro.api import facade
+from repro.api.spec import RunSpec
+
+SECTION_KEYS = ("scheduling", "robustness", "cluster", "execution",
+                "adaptive", "n_tasks", "name")
+
+
+def load_workload(w: dict) -> np.ndarray:
+    kind = w.get("kind", "uniform")
+    n = w.get("n")
+    if kind == "uniform":
+        return np.full(int(n or 1024), float(w.get("t", 1.0)))
+    if kind == "normal":
+        rng = np.random.default_rng(int(w.get("seed", 0)))
+        tt = rng.normal(float(w.get("mean", 0.01)),
+                        float(w.get("sd", 0.004)), int(n or 1024))
+        return np.abs(tt) + 1e-4
+    if kind == "psia":
+        from repro.apps import psia
+        return psia.task_times(int(n) if n else psia.PAPER_N)
+    if kind == "mandelbrot":
+        from repro.apps import mandelbrot
+        return mandelbrot.task_times(int(n) if n else 16_384)
+    raise ValueError(f"unknown workload kind {kind!r}")
+
+
+def apply_overrides(spec: RunSpec, overrides: dict) -> RunSpec:
+    """Scalar dotted-path overrides plus whole-section replacement."""
+    d = None
+    for path, value in (overrides or {}).items():
+        if path in SECTION_KEYS and isinstance(value, (dict, list)):
+            if d is None:
+                d = spec.to_dict()
+            d[path] = value
+            continue
+        if d is not None:               # flush section replacements first
+            spec, d = RunSpec.from_dict(d), None
+        spec = spec.override(path, value)
+    return RunSpec.from_dict(d) if d is not None else spec
+
+
+def load_run_file(path: str):
+    """-> (task_times, [(name, RunSpec)], metric, baseline_scenario)."""
+    with open(path) as f:
+        doc = json.load(f)
+    base = RunSpec.from_dict(doc.get("spec", {}))
+    tt = load_workload(doc.get("workload", {}))
+    sweep = doc.get("sweep")
+    if sweep:
+        entries = [(e.get("name", f"run{i}"),
+                    apply_overrides(base, e.get("overrides", {})))
+                   for i, e in enumerate(sweep)]
+    else:
+        entries = [(base.name or "run", base)]
+    return (tt, entries, doc.get("metric", "t_par"),
+            doc.get("baseline_scenario", "baseline"))
+
+
+def cmd_run(args) -> int:
+    tt, entries, metric, baseline = load_run_file(args.spec)
+    if args.dry_run:
+        for name, spec in entries:
+            facade.build(spec, facade.engine.WorkerBackend(),
+                         n_tasks=len(tt))      # validates the full spec
+            print(f"dryrun,{name},ok,N={len(tt)},"
+                  f"P={spec.cluster.n_workers},"
+                  f"technique={spec.scheduling.technique}")
+        print(f"dryrun,total,{len(entries)} run(s) validated")
+        return 0
+    rows = []
+    for name, spec in entries:
+        r = facade.simulate(spec, tt)
+        rows.append((name, r))
+        print(f"run,{name},{spec.scheduling.technique},"
+              f"{spec.cluster.name or spec.name or 'cluster'},"
+              f"{int(spec.robustness.rdlb_enabled)},{r.t_par},"
+              f"{r.n_duplicates},{r.wasted_tasks},{int(r.hang)}")
+    if metric == "resilience":
+        for line in resilience_lines(rows, baseline):
+            print(line)
+    if args.csv:
+        import csv
+        with open(args.csv, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["name", "technique", "scenario", "rdlb", "t_par",
+                        "n_duplicates", "wasted_tasks", "hung"])
+            for name, r in rows:
+                w.writerow([name, r.technique, r.scenario, int(r.rdlb),
+                            r.t_par, r.n_duplicates, r.wasted_tasks,
+                            int(r.hang)])
+    return 0
+
+
+def resilience_lines(rows, baseline_scenario: str) -> list:
+    """FePIA ρ_res per (scenario, technique) — the fig4 data points.
+
+    Row names must be ``<scenario>/<technique>``; the baseline t_par of
+    each technique comes from the ``<baseline_scenario>/...`` rows.
+    """
+    from repro.core import robustness
+    by: dict = {}
+    for name, r in rows:
+        scen, _, tech = name.rpartition("/")
+        by.setdefault(scen, {})[tech] = r.t_par
+    tb = by.get(baseline_scenario)
+    out = []
+    if not tb:
+        return [f"resilience,ERROR,no '{baseline_scenario}/<tech>' rows"]
+    for scen in sorted(by):
+        if scen == baseline_scenario:
+            continue
+        tf = {t: v for t, v in by[scen].items() if t in tb}
+        rho = robustness.resilience(tf, {t: tb[t] for t in tf})
+        out += [f"resilience,{scen},{t},{rho[t]:.4f}"
+                for t in sorted(rho)]
+    return out
+
+
+def cmd_show(args) -> int:
+    tt, entries, metric, baseline = load_run_file(args.spec)
+    print(f"workload: {len(tt)} tasks, total {tt.sum():.4g}s nominal")
+    print(f"metric: {metric}" + (f" (baseline={baseline})"
+                                 if metric == "resilience" else ""))
+    for name, spec in entries:
+        print(f"--- {name} ---")
+        print(spec.to_json())
+    return 0
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Run rDLB simulations/benchmarks from JSON RunSpecs.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_run = sub.add_parser("run", help="execute a spec file")
+    p_run.add_argument("--spec", required=True, help="JSON spec file")
+    p_run.add_argument("--dry-run", action="store_true",
+                       help="validate and build without running")
+    p_run.add_argument("--csv", default="", help="also write rows to CSV")
+    p_run.set_defaults(fn=cmd_run)
+    p_show = sub.add_parser("show", help="pretty-print a spec file")
+    p_show.add_argument("--spec", required=True)
+    p_show.set_defaults(fn=cmd_show)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -80,6 +80,7 @@ class EngineWorker:
     alive: bool = True
     tasks_done: int = 0                     # executed, incl. wasted
     busy: float = 0.0                       # virtual compute seconds
+    last_done: float = 0.0                  # instant of last completed chunk
 
     def alive_at(self, t: float) -> bool:
         return self.alive and (self.fail_time is None or t < self.fail_time)
@@ -205,6 +206,12 @@ class Engine:
             for i, w in enumerate(self.workers):
                 end = min(t_par, w.fail_time if w.fail_time is not None
                           else t_par)
+                if not w.alive and w.fail_time is None:
+                    # Count-based fail-stop (or initially-dead worker):
+                    # no fail instant exists, so clamp idle at the last
+                    # completion — the worker stopped existing for the
+                    # run at that point, not at t_par.
+                    end = min(end, w.last_done)
                 idle[i] = max(0.0, end - w.busy)
         q = self.queue
         return EngineStats(
@@ -271,6 +278,7 @@ class Engine:
                 return True
             payload = self._execute(c, wid)
             w.busy += done_at - reply_at
+            w.last_done = done_at
             inflight += 1
             heapq.heappush(heap, (done_at, next(counter), COMPLETE,
                                   wid, c, payload))
@@ -390,6 +398,7 @@ class Engine:
                 if w.sleep_per_task > 0.0:
                     time.sleep(w.sleep_per_task * chunk.size)
                 w.busy += time.monotonic() - t_exec0
+                w.last_done = time.monotonic() - t0
                 with self._commit_lock:
                     newly = queue.report_tasks(chunk)
                     self.backend.commit(chunk, w.wid, payload, newly)

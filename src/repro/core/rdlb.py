@@ -281,6 +281,7 @@ class RobustQueue:
                 outstanding_duplicates=sum(
                     v for v in self._dup_count.values() if v > 0),
                 technique=self.technique.name,
+                rdlb_enabled=self.rdlb_enabled,
                 max_duplicates=self.max_duplicates,
                 barrier_max_duplicates=self.barrier_max_duplicates,
                 stats=[s.scaled_copy() for s in self.technique.stats],
@@ -290,7 +291,8 @@ class RobustQueue:
 
     def swap_technique(self, technique: dls.Technique, *,
                        max_duplicates: Any = _KEEP,
-                       barrier_max_duplicates: Any = _KEEP) -> None:
+                       barrier_max_duplicates: Any = _KEEP,
+                       rdlb_enabled: Any = _KEEP) -> None:
         """Hot-swap the chunk-size calculator (and rDLB knobs) mid-run.
 
         Exactly-once accounting is owned by the flag array and the
@@ -298,6 +300,9 @@ class RobustQueue:
         chunks complete (or get re-issued) exactly as before, and the new
         technique only sizes FUTURE chunks.  Barrier-miss counters reset
         because the incoming technique starts with clean batch state.
+        ``rdlb_enabled`` may toggle the re-issue path itself (request()
+        consults it per transaction, so enabling it mid-run immediately
+        lets idle workers pick up duplicates).
         """
         with self._lock:
             self.technique = technique
@@ -305,6 +310,8 @@ class RobustQueue:
                 self.max_duplicates = max_duplicates
             if barrier_max_duplicates is not self._KEEP:
                 self.barrier_max_duplicates = barrier_max_duplicates
+            if rdlb_enabled is not self._KEEP:
+                self.rdlb_enabled = rdlb_enabled
             self._barrier_waiters.clear()
 
     def record_feedback(self, chunk: Chunk, compute_time: float,

@@ -42,6 +42,9 @@ class SimResult:
     technique: str
     scenario: str
     rdlb: bool
+    adaptive_decisions: list = dataclasses.field(default_factory=list)
+                                 # DecisionRecords when an adaptive policy
+                                 # watched the run (spec.adaptive.enabled)
 
     @property
     def hang(self) -> bool:
@@ -65,29 +68,57 @@ class SimBackend(engine.WorkerBackend):
 
 def workers_from_scenario(scenario: faults.Scenario
                           ) -> list[engine.EngineWorker]:
-    """Map a paper scenario (Table 1) onto engine worker liveness."""
-    return [engine.EngineWorker(pe, speed=p.speed,
-                                msg_latency=p.msg_latency,
-                                fail_time=p.fail_time)
-            for pe, p in enumerate(scenario.profiles)]
+    """Map a paper scenario (Table 1) onto engine worker liveness —
+    routed through the one perturbation vocabulary (ClusterSpec)."""
+    from repro.api.spec import ClusterSpec
+    return ClusterSpec.from_scenario(scenario).engine_workers()
+
+
+_UNSET = object()
+
+
+def spec_from_legacy(technique_name: str, scenario: faults.Scenario, *,
+                     rdlb_enabled: bool = True, seed: int = 0,
+                     h: float = 1e-4,
+                     max_duplicates: Optional[int] = None,
+                     barrier_max_duplicates: Optional[int] = 1,
+                     horizon: float = 1e7):
+    """The legacy simulator keyword vocabulary as one RunSpec."""
+    from repro import api
+    return api.RunSpec(
+        scheduling=api.SchedulingSpec(technique=technique_name, seed=seed),
+        robustness=api.RobustnessSpec(
+            rdlb_enabled=rdlb_enabled, max_duplicates=max_duplicates,
+            barrier_max_duplicates=barrier_max_duplicates),
+        cluster=api.ClusterSpec.from_scenario(scenario),
+        execution=api.ExecutionSpec(h=h, horizon=horizon))
 
 
 def simulate(task_times: np.ndarray,
-             technique: dls.Technique,
-             scenario: faults.Scenario,
+             technique: Optional[dls.Technique] = None,
+             scenario: Optional[faults.Scenario] = None,
              *,
-             rdlb_enabled: bool = True,
-             h: float = 1e-4,
-             max_duplicates: Optional[int] = None,
-             barrier_max_duplicates: Optional[int] = 1,
-             horizon: float = 1e7,
+             spec=None,
+             rdlb_enabled=_UNSET,
+             h=_UNSET,
+             max_duplicates=_UNSET,
+             barrier_max_duplicates=_UNSET,
+             horizon=_UNSET,
              queue_cls: type = rdlb.RobustQueue,
              backend: Optional[engine.WorkerBackend] = None,
              adaptive=None) -> SimResult:
     """Run one DLS execution and return its timing/robustness metrics.
 
+    New form: ``simulate(task_times, spec=run_spec)`` — everything about
+    the run comes from the declarative :class:`repro.api.RunSpec`
+    (equivalent to ``repro.api.simulate(spec, task_times)``).
+
+    Legacy form (deprecated): pass a prebuilt ``technique`` object, a
+    ``faults.Scenario``, and the keyword knobs.  The shim constructs the
+    equivalent spec — runs are identical event-for-event — and emits a
+    ``DeprecationWarning``.
+
     task_times[i]: nominal execution time of task i on an unperturbed PE.
-    h:             master scheduling overhead per transaction (seconds).
     queue_cls:     RobustQueue subclass (custom queue wiring).
     backend:       override the timing-only backend — inject a
                    real-executing backend (e.g. runtime.backends.FnBackend
@@ -97,27 +128,32 @@ def simulate(task_times: np.ndarray,
                    the run at decision points and hot-swaps the
                    technique/rDLB knobs for the remainder.
     """
-    N = len(task_times)
-    queue = queue_cls(N, technique, rdlb_enabled=rdlb_enabled,
-                      max_duplicates=max_duplicates,
-                      barrier_max_duplicates=barrier_max_duplicates)
-    eng = engine.Engine(queue, workers_from_scenario(scenario),
-                        backend or SimBackend(task_times),
-                        h=h, horizon=horizon, adaptive=adaptive)
-    st = eng.run()
-    return SimResult(
-        t_par=st.t_virtual,
-        n_finished=st.n_finished,
-        n_tasks=N,
-        n_assignments=st.n_assignments,
-        n_duplicates=st.n_duplicates,
-        wasted_tasks=st.wasted_tasks,
-        pe_busy=st.worker_busy,
-        pe_idle=st.worker_idle,
-        technique=technique.name,
-        scenario=scenario.name,
-        rdlb=rdlb_enabled,
-    )
+    from repro import api
+    legacy = {k: v for k, v in dict(
+        rdlb_enabled=rdlb_enabled, h=h, max_duplicates=max_duplicates,
+        barrier_max_duplicates=barrier_max_duplicates,
+        horizon=horizon).items() if v is not _UNSET}
+    if spec is not None:
+        if technique is not None or scenario is not None or legacy:
+            raise TypeError("simulate(spec=...) takes no legacy "
+                            "technique/scenario/keyword arguments")
+        return api.simulate(spec, task_times, backend=backend,
+                            adaptive=adaptive, queue_cls=queue_cls)
+    if technique is None or scenario is None:
+        raise TypeError("simulate() needs either spec= or "
+                        "(technique, scenario)")
+    api.warn_legacy("simulator.simulate(task_times, technique, scenario, "
+                    "...)")
+    try:
+        spec = spec_from_legacy(technique.name, scenario, **legacy)
+    except ValueError:
+        # A custom Technique subclass whose name is not a registered DLS
+        # technique: the prebuilt object drives the run either way; the
+        # spec just carries a placeholder name.
+        spec = spec_from_legacy("FAC", scenario, **legacy)
+    return api.simulate(spec, task_times, technique=technique,
+                        backend=backend, adaptive=adaptive,
+                        queue_cls=queue_cls)
 
 
 def run(task_times: np.ndarray, technique_name: str,
@@ -126,15 +162,15 @@ def run(task_times: np.ndarray, technique_name: str,
         max_duplicates: Optional[int] = None) -> SimResult:
     """Entry point: builds the technique by name.
 
-    Adaptive techniques (AWF-*/AF) need no special wiring any more: the
-    engine records chunk feedback — (size, compute time, scheduling
-    time), DLS4LB's chunk-granularity hook — on every completion report.
+    A thin convenience over the spec API: constructs the equivalent
+    RunSpec and calls ``repro.api.simulate`` (no deprecation — this IS
+    the spec vocabulary, spelled as a function call).
     """
-    technique = dls.make_technique(technique_name, len(task_times),
-                                   scenario.P, seed=seed)
-    return simulate(task_times, technique, scenario,
-                    rdlb_enabled=rdlb_enabled, h=h,
-                    max_duplicates=max_duplicates)
+    from repro import api
+    spec = spec_from_legacy(technique_name, scenario,
+                            rdlb_enabled=rdlb_enabled, seed=seed, h=h,
+                            max_duplicates=max_duplicates)
+    return api.simulate(spec, task_times)
 
 
 # API-compat alias: the adaptive path no longer differs from run().

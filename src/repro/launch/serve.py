@@ -39,9 +39,11 @@ def main(argv=None):
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    ex = RDLBServeExecutor(model, params, n_workers=args.n_workers,
-                           technique=args.technique,
-                           rdlb_enabled=not args.no_rdlb)
+    from repro import api
+    spec = api.serve_spec(technique=args.technique,
+                          n_workers=args.n_workers,
+                          rdlb_enabled=not args.no_rdlb)
+    ex = RDLBServeExecutor(model, params, spec=spec)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     size=args.prompt_len).astype(np.int32),

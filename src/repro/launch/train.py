@@ -28,7 +28,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke
 from repro.data import batch_for_step
 from repro.models import build_model
-from repro.runtime import FaultPlan, RDLBTrainExecutor
+from repro.runtime import RDLBTrainExecutor
 from repro.runtime.elastic import shrink_to_survivors
 
 
@@ -65,10 +65,12 @@ def main(argv=None):
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
-    executor = RDLBTrainExecutor(
-        model, n_workers=args.n_workers, n_tasks=args.n_tasks,
-        technique=args.technique, rdlb_enabled=not args.no_rdlb,
-        optimizer=args.optimizer, lr=args.lr)
+    from repro import api
+    spec = api.train_spec(technique=args.technique,
+                          n_workers=args.n_workers, n_tasks=args.n_tasks,
+                          rdlb_enabled=not args.no_rdlb)
+    executor = RDLBTrainExecutor(model, spec=spec,
+                                 optimizer=args.optimizer, lr=args.lr)
     params = model.init(jax.random.PRNGKey(args.seed))
     opt_state = executor.opt.init(params)
     n_params = sum(int(np.prod(x.shape))
@@ -93,23 +95,28 @@ def main(argv=None):
     while step < args.steps:
         batch = batch_for_step(cfg, step, args.global_batch, args.seq_len,
                                seed=args.seed)
-        plan = None
         if step in fail_plan:
-            # one-shot: a failed node does not re-fail after restart
+            # one-shot: a failed node does not re-fail after restart.
+            # Injected straight into the live worker state (the unified
+            # WorkerSpec vocabulary: fail_after_tasks).
             victims = fail_plan.pop(step)
-            plan = FaultPlan(fail_after={w: 0 for w in victims})
+            for w in victims:
+                executor.workers[w].fail_after_tasks = 0
             print(f"step {step}: injecting fail-stop of workers {victims}")
         t0 = time.time()
-        res = executor.train_step(params, opt_state, batch,
-                                  fault_plan=plan)
+        res = executor.train_step(params, opt_state, batch)
         dt = time.time() - t0
         if res.hung:
             print(f"step {step}: HUNG (non-robust DLS with failure) — "
                   f"restarting from checkpoint")
-            if ckpt is None or ckpt.latest() is None:
+            # restore_latest waits on any in-flight async save; checking
+            # latest() here instead used to race it and abort spuriously
+            restored = (ckpt.restore_latest({"params": params,
+                                             "opt": opt_state})
+                        if ckpt is not None else None)
+            if restored is None:
                 raise SystemExit("no checkpoint to restart from; aborting")
-            (state, step) = ckpt.restore_latest(
-                {"params": params, "opt": opt_state})
+            (state, step) = restored
             params, opt_state = state["params"], state["opt"]
             executor.reset_workers()
             continue

@@ -21,6 +21,14 @@ reduction):
   * without rDLB, a failure turns the step into the paper's Fig. 1b hang —
     surfaced as ``StepResult.hung`` instead of an infinite wait.
 
+Configuration is a declarative :class:`repro.api.RunSpec`
+(``RDLBTrainExecutor(model, spec=spec)``); the legacy keyword vocabulary
+(``technique=``, ``rdlb_enabled=``, ``FaultPlan`` …) still works as a
+shim that builds the equivalent spec under a ``DeprecationWarning``.
+Worker perturbations — spec-declared or FaultPlan-injected — flow through
+the ONE vocabulary, ``repro.api.ClusterSpec``, which is the only
+constructor of ``EngineWorker`` lists.
+
 After a step with losses, ``runtime.elastic`` shrinks the worker set (and,
 on hardware, re-meshes + re-shards via the checkpoint substrate).
 """
@@ -31,13 +39,13 @@ import dataclasses
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import dls, rdlb
-from repro.core.engine import Engine, EngineWorker
+from repro import api
 from repro.data import chunk_batch
 from repro.optim import apply_updates, clip_by_global_norm, make_optimizer
 from repro.runtime.backends import TrainBackend
+
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -48,11 +56,21 @@ class WorkerState:
     fail_after_tasks: Optional[int] = None  # fail-stop after N task execs
     tasks_done: int = 0                   # executed (incl. wasted)
     credit: float = 0.0
+    # The spec-declared WorkerSpec this state was materialized from —
+    # carries perturbations the live fields above don't track
+    # (fail_time, msg_latency, sleep_per_task) back into each step's
+    # ClusterSpec.  None = nominal.
+    profile: Optional[api.WorkerSpec] = None
 
 
 @dataclasses.dataclass
 class FaultPlan:
-    """Per-step fault/perturbation injection (worker id -> behaviour)."""
+    """Per-step fault/perturbation injection (worker id -> behaviour).
+
+    Legacy vocabulary: ``ClusterSpec.from_fault_plan`` absorbs it into
+    the unified WorkerSpec fields (``slow`` maps to ``speed``,
+    ``fail_after`` to ``fail_after_tasks``).
+    """
     fail_after: dict = dataclasses.field(default_factory=dict)
     slow: dict = dataclasses.field(default_factory=dict)
 
@@ -83,49 +101,74 @@ class RDLBTrainExecutor:
     Parameters
     ----------
     model:       any repro.models model (has .loss(params, batch)).
-    n_workers:   data-parallel worker groups.
-    n_tasks:     grad-accum microbatches per global step (tasks).
-    technique:   DLS technique name (repro.core.dls.ALL_TECHNIQUES).
-    rdlb:        enable the robust re-issue path (False = plain DLS4LB).
+    spec:        a :class:`repro.api.RunSpec` — scheduling technique,
+                 rDLB knobs, cluster (worker count + perturbations),
+                 execution mode (``"threaded"`` = real OS threads whose
+                 duplicates race in wall-clock time), adaptive policy.
+                 ``spec.n_tasks`` is the grad-accum microbatches per
+                 global step.
+    optimizer/lr/grad_clip/loss_fn: training-side knobs (not scheduling
+                 — deliberately outside the spec).
     exact_accumulation: store per-task grads and reduce in task order —
                  bit-identical results regardless of schedule (used by the
                  equality tests); False accumulates in arrival order.
-    concurrent:  run workers as real OS threads (duplicates genuinely race
-                 in wall-clock time) instead of the deterministic
-                 virtual-time loop.  Gradients are identical either way
-                 when exact_accumulation is on.
-    adaptive:    optional adaptive policy (repro.adaptive
-                 .AdaptiveController): snapshots each step's engine run at
-                 decision points and hot-swaps the technique/rDLB knobs
-                 for the remainder (tasks are unit-cost microbatches).
+    adaptive:    optional live adaptive policy object
+                 (repro.adaptive.AdaptiveController), overriding
+                 ``spec.adaptive``.
+
+    Legacy keywords (deprecated): ``n_workers``, ``n_tasks``,
+    ``technique``, ``rdlb_enabled``, ``max_duplicates``, ``concurrent``
+    build the equivalent spec and warn.
     """
 
-    def __init__(self, model, *, n_workers: int = 4, n_tasks: int = 8,
-                 technique: str = "FAC", rdlb_enabled: bool = True,
+    def __init__(self, model, *, spec: Optional[api.RunSpec] = None,
+                 n_workers: Any = _UNSET, n_tasks: Any = _UNSET,
+                 technique: Any = _UNSET, rdlb_enabled: Any = _UNSET,
                  optimizer: str = "adamw", lr: float = 1e-3,
                  grad_clip: float = 1.0, exact_accumulation: bool = False,
-                 max_duplicates: Optional[int] = None,
+                 max_duplicates: Any = _UNSET,
                  loss_fn: Optional[Callable] = None,
-                 concurrent: bool = False,
+                 concurrent: Any = _UNSET,
                  adaptive: Optional[Any] = None):
+        legacy = {k: v for k, v in dict(
+            n_workers=n_workers, n_tasks=n_tasks, technique=technique,
+            rdlb_enabled=rdlb_enabled, max_duplicates=max_duplicates,
+            concurrent=concurrent).items() if v is not _UNSET}
+        if spec is None:
+            if legacy:
+                api.warn_legacy(f"RDLBTrainExecutor({', '.join(legacy)})")
+            spec = api.train_spec(
+                technique=legacy.get("technique", "FAC"),
+                n_workers=legacy.get("n_workers", 4),
+                n_tasks=legacy.get("n_tasks", 8),
+                rdlb_enabled=legacy.get("rdlb_enabled", True),
+                max_duplicates=legacy.get("max_duplicates"),
+                threaded=bool(legacy.get("concurrent")))
+        elif legacy:
+            raise TypeError("pass spec= OR legacy keywords, not both: "
+                            f"{sorted(legacy)}")
+        if spec.n_tasks is None:
+            raise ValueError("training needs spec.n_tasks (microbatches "
+                             "per global step)")
+        self.spec = spec
+        self.n_workers = spec.cluster.n_workers
+        self.n_tasks = spec.n_tasks
         self.model = model
-        self.n_workers = n_workers
-        self.n_tasks = n_tasks
-        self.technique_name = technique
-        self.rdlb_enabled = rdlb_enabled
         self.exact_accumulation = exact_accumulation
-        self.max_duplicates = max_duplicates
-        self.concurrent = concurrent
         self.adaptive = adaptive
         self.opt = make_optimizer(optimizer, lr=lr)
         self.grad_clip = grad_clip
         base_loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
         self._grad_fn = jax.jit(jax.value_and_grad(base_loss))
-        self.workers = [WorkerState(w) for w in range(n_workers)]
+        self.reset_workers()
 
     # ------------------------------------------------------------- helpers
     def reset_workers(self) -> None:
-        self.workers = [WorkerState(w) for w in range(self.n_workers)]
+        """(Re)materialize live worker state from the spec's cluster."""
+        self.workers = [
+            WorkerState(wid, alive=w.alive, speed=w.speed,
+                        fail_after_tasks=w.fail_after_tasks, profile=w)
+            for wid, w in enumerate(self.spec.cluster.worker_specs())]
 
     @property
     def alive_workers(self) -> list[WorkerState]:
@@ -139,29 +182,32 @@ class RDLBTrainExecutor:
     # ---------------------------------------------------------------- step
     def train_step(self, params, opt_state, batch: dict, *,
                    fault_plan: Optional[FaultPlan] = None,
-                   max_rounds: int = 100000) -> StepResult:
+                   max_rounds: Optional[int] = None) -> StepResult:
         B = batch["tokens"].shape[0]
         assert B % self.n_tasks == 0, (B, self.n_tasks)
         if fault_plan:
+            api.warn_legacy("train_step(fault_plan=...); declare the "
+                            "perturbations on spec.cluster")
             fault_plan.apply(self.workers)
-        technique = dls.make_technique(self.technique_name, self.n_tasks,
-                                       self.n_workers)
-        queue = rdlb.RobustQueue(self.n_tasks, technique,
-                                 rdlb_enabled=self.rdlb_enabled,
-                                 max_duplicates=self.max_duplicates)
+        # The step's cluster is the LIVE worker state (liveness and
+        # speeds learned/injected so far), through the one vocabulary.
+        cluster = api.ClusterSpec.from_worker_states(
+            self.workers, name=self.spec.cluster.name or "train")
+        spec = self.spec.replace(cluster=cluster, n_tasks=self.n_tasks)
+        if max_rounds is not None:
+            spec = spec.override("execution.horizon", float(max_rounds))
         backend = TrainBackend(
             lambda t: self._grad_fn(params, self._task_batch(batch, t)),
             exact_accumulation=self.exact_accumulation)
-        eworkers = [EngineWorker(w.wid, speed=w.speed, alive=w.alive,
-                                 fail_after_tasks=w.fail_after_tasks,
-                                 tasks_done=w.tasks_done)
-                    for w in self.workers]
-        eng = Engine(queue, eworkers, backend, h=0.0,
-                     horizon=float(max_rounds), adaptive=self.adaptive)
-        stats = eng.run_threaded() if self.concurrent else eng.run()
-        for w, ew in zip(self.workers, eworkers):   # liveness flows back
+        eng = api.build(spec, backend, n_tasks=self.n_tasks,
+                        adaptive=self.adaptive)
+        for ew, w in zip(eng.workers, self.workers):
+            ew.tasks_done = w.tasks_done     # count-based fail-stop state
+        stats = api.run(spec, eng)
+        for w, ew in zip(self.workers, eng.workers):  # liveness flows back
             w.alive, w.tasks_done = ew.alive, ew.tasks_done
 
+        queue = eng.queue
         grad_acc = backend.reduced()
         if stats.hung or grad_acc is None:
             return StepResult(params, opt_state, float("nan"), True,

@@ -31,9 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dls, rdlb
-from repro.core.engine import Engine, EngineWorker
+from repro import api
 from repro.runtime.backends import ServeBackend
+
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -63,24 +64,54 @@ def _pad_pow2(n: int) -> int:
 
 
 class RDLBServeExecutor:
-    def __init__(self, model, params, *, n_workers: int = 2,
-                 technique: str = "SS", rdlb_enabled: bool = True,
-                 max_duplicates: Optional[int] = None,
+    """Robust continuous batching, configured by a declarative
+    :class:`repro.api.RunSpec` (``spec=``).
+
+    The spec's cluster is the one perturbation vocabulary: declare dead
+    replicas (``alive=False``), stragglers (``sleep_per_task`` /
+    ``speed``) or count-based fail-stops (``fail_after_tasks``) there.
+    Legacy keywords (``n_workers=``, ``technique=``, …) and the mutable
+    ``dead``/``slow`` sets still work as a deprecation shim — both paths
+    meet in ``ClusterSpec.with_serve_state``.
+    """
+
+    def __init__(self, model, params, *, spec: Optional[api.RunSpec] = None,
+                 n_workers: Any = _UNSET,
+                 technique: Any = _UNSET, rdlb_enabled: Any = _UNSET,
+                 max_duplicates: Any = _UNSET,
                  batch_decode: bool = True,
-                 concurrent: bool = False,
+                 concurrent: Any = _UNSET,
                  adaptive: Optional[Any] = None):
+        legacy = {k: v for k, v in dict(
+            n_workers=n_workers, technique=technique,
+            rdlb_enabled=rdlb_enabled, max_duplicates=max_duplicates,
+            concurrent=concurrent).items() if v is not _UNSET}
+        if spec is None:
+            if legacy:
+                api.warn_legacy(f"RDLBServeExecutor({', '.join(legacy)})")
+            spec = api.serve_spec(
+                technique=legacy.get("technique", "SS"),
+                n_workers=legacy.get("n_workers", 2),
+                rdlb_enabled=legacy.get("rdlb_enabled", True),
+                max_duplicates=legacy.get("max_duplicates"),
+                threaded=bool(legacy.get("concurrent")))
+        elif legacy:
+            raise TypeError("pass spec= OR legacy keywords, not both: "
+                            f"{sorted(legacy)}")
+        self.spec = spec
         self.model = model
         self.params = params
-        self.n_workers = n_workers
-        self.technique_name = technique
-        self.rdlb_enabled = rdlb_enabled
-        self.max_duplicates = max_duplicates
+        self.n_workers = spec.cluster.n_workers
         self.batch_decode = batch_decode
-        self.concurrent = concurrent
         self.adaptive = adaptive        # repro.adaptive policy (requests
                                         # are unit-cost tasks)
         self._decode = jax.jit(model.decode_step)
-        self.dead: set[int] = set()
+        # Live perturbation state the legacy vocabulary mutates between
+        # serve() calls; overlaid on the spec's cluster each serve().
+        # Spec-declared deaths seed the set so fail-stops persist.
+        self.dead: set[int] = {wid for wid, w in
+                               enumerate(spec.cluster.worker_specs())
+                               if not w.alive}
         self.slow: dict[int, float] = {}      # wid -> extra s per request
 
     def fail_worker(self, wid: int) -> None:
@@ -139,31 +170,29 @@ class RDLBServeExecutor:
     # -------------------------------------------------------------- serve
     def serve(self, requests: list[Request],
               *, fail_at: Optional[dict] = None,
-              max_rounds: int = 100000,
+              max_rounds: Optional[int] = None,
               concurrent: Optional[bool] = None) -> ServeStats:
         """Process a batch of requests; fail_at: {wid: after_n_requests}."""
         N = len(requests)
-        technique = dls.make_technique(self.technique_name, N,
-                                       self.n_workers)
-        queue = rdlb.RobustQueue(N, technique,
-                                 rdlb_enabled=self.rdlb_enabled,
-                                 max_duplicates=self.max_duplicates)
-        fail_at = fail_at or {}
+        # One perturbation vocabulary: dead/slow/fail_at overlay onto the
+        # spec cluster via ClusterSpec.with_serve_state — slow (extra
+        # seconds per request) maps to BOTH modes there: a real sleep in
+        # threaded mode, a speed divisor in virtual time (nominal cost is
+        # 1 virtual second per request).
+        cluster = self.spec.cluster.with_serve_state(
+            dead=self.dead, slow=self.slow, fail_at=fail_at or {})
+        spec = self.spec.replace(cluster=cluster, n_tasks=N)
+        if max_rounds is not None:
+            spec = spec.override("execution.horizon", float(max_rounds))
+        if concurrent is not None:
+            spec = spec.override("execution.mode",
+                                 "threaded" if concurrent else "virtual")
         backend = ServeBackend(requests, self._generate_chunk)
-        # self.slow (extra seconds per request) maps to BOTH modes: a real
-        # sleep in threaded mode, and a speed divisor in virtual time
-        # (nominal cost is 1 virtual second per request).
-        eworkers = [EngineWorker(wid, alive=wid not in self.dead,
-                                 fail_after_tasks=fail_at.get(wid),
-                                 speed=1.0 / (1.0 + self.slow.get(wid, 0.0)),
-                                 sleep_per_task=self.slow.get(wid, 0.0))
-                    for wid in range(self.n_workers)]
-        eng = Engine(queue, eworkers, backend, h=0.0,
-                     horizon=float(max_rounds), adaptive=self.adaptive)
-        threaded = self.concurrent if concurrent is None else concurrent
-        stats = eng.run_threaded() if threaded else eng.run()
-        for ew in eworkers:                 # fail-stops persist
+        eng = api.build(spec, backend, n_tasks=N, adaptive=self.adaptive)
+        stats = api.run(spec, eng)
+        for ew in eng.workers:              # fail-stops persist
             if not ew.alive:
                 self.dead.add(ew.wid)
+        queue = eng.queue
         return ServeStats(N, queue.n_duplicates, queue.wasted_tasks,
                           stats.hung, dict(stats.by_worker))

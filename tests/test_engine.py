@@ -199,6 +199,81 @@ def test_concurrent_serve_hang_without_rdlb(serve_setup):
     assert stats.hung
 
 
+# ---------------------------------------------- spec/legacy parity suite
+@pytest.mark.parametrize("technique", ["SS", "FAC", "AWF-B"])
+def test_spec_built_run_matches_legacy_assignment_log(technique):
+    """Satellite acceptance: a spec-built run produces an assignment log
+    IDENTICAL to the legacy-kwarg construction of the same run."""
+    from repro import api
+    N, P = 64, 4
+    tt = np.abs(np.random.default_rng(1).normal(0.05, 0.02, N)) + 1e-3
+    sc = faults.Scenario("parity", [
+        faults.PEProfile(),
+        faults.PEProfile(speed=0.25),
+        faults.PEProfile(fail_time=0.5),
+        faults.PEProfile(msg_latency=0.05),
+    ])
+
+    # legacy wiring, by hand
+    tech = dls.make_technique(technique, N, P, seed=3)
+    queue = rdlb.RobustQueue(N, tech, max_duplicates=2)
+    legacy_eng = engine.Engine(queue, simulator.workers_from_scenario(sc),
+                               simulator.SimBackend(tt), h=1e-4)
+    st_legacy = legacy_eng.run()
+
+    # the same run, declared as data
+    spec = api.RunSpec(
+        scheduling=api.SchedulingSpec(technique=technique, seed=3),
+        robustness=api.RobustnessSpec(max_duplicates=2),
+        cluster=api.ClusterSpec.from_scenario(sc),
+        execution=api.ExecutionSpec(h=1e-4))
+    spec = api.RunSpec.from_json(spec.to_json())   # ... through JSON
+    spec_eng = api.build(spec, simulator.SimBackend(tt), n_tasks=N)
+    st_spec = api.run(spec, spec_eng)
+
+    assert not st_legacy.hung and not st_spec.hung
+    assert ([chunk_key(c) for c in st_legacy.assignment_log]
+            == [chunk_key(c) for c in st_spec.assignment_log])
+    assert st_legacy.t_virtual == pytest.approx(st_spec.t_virtual)
+    assert st_legacy.n_duplicates == st_spec.n_duplicates
+
+
+# ------------------------------------- idle accounting (count-based fail)
+def test_idle_clamped_at_last_completion_for_count_based_failstop():
+    """Regression: a worker with fail_after_tasks (fail_time None) used
+    to accrue idle until t_par; idle now ends at its last completion."""
+    from repro import api
+    N = 8
+    tt = np.ones(N)
+    spec = api.RunSpec(
+        cluster=api.ClusterSpec(
+            n_workers=2,
+            workers=(api.WorkerSpec(),
+                     api.WorkerSpec(fail_after_tasks=1))),
+        scheduling=api.SchedulingSpec(technique="SS"),
+        execution=api.ExecutionSpec(h=1e-9))
+    eng = api.build(spec, simulator.SimBackend(tt), n_tasks=N)
+    st = api.run(spec, eng)
+    assert not st.hung
+    # worker 1 executed exactly 1 task (~1s busy) then died at its next
+    # assignment; t_par ~ 7s.  Its idle must be ~0 (clamped at the last
+    # completion), not ~6s.
+    assert st.by_worker.get(1, 0) == 1
+    assert st.t_virtual > 5.0
+    assert st.worker_idle[1] < 0.5
+    # the healthy worker's idle accounting is unchanged
+    assert st.worker_idle[0] < 0.5
+    # initially-dead workers accrue no idle either
+    spec2 = spec.override("cluster.workers", ())
+    spec2 = spec2.replace(cluster=api.ClusterSpec(
+        n_workers=2, workers=(api.WorkerSpec(),
+                              api.WorkerSpec(alive=False))))
+    eng2 = api.build(spec2, simulator.SimBackend(tt), n_tasks=N)
+    st2 = api.run(spec2, eng2)
+    assert not st2.hung
+    assert st2.worker_idle[1] == 0.0
+
+
 # ------------------------------------------------------------ stats shape
 def test_engine_stats_coherent():
     N, P = 32, 4
