@@ -1,0 +1,118 @@
+"""Process-cluster benchmark: dispatch overhead + resilience with REAL kills.
+
+Two measurements on the process runtime (repro.cluster):
+
+1. **Dispatch overhead** — N zero-cost tasks through threaded vs
+   process mode: per-task scheduling cost of the socket transport +
+   real processes over in-process threads (microseconds/task).
+2. **Fig.-4-style resilience point** — the same ClusterSpec run
+   unperturbed and with P−1 real SIGKILLs mid-run: completion stays
+   exactly-once (the paper's claim, physically) and the makespan
+   degradation factor is reported alongside the virtual twin's
+   prediction of the same scenario.
+
+Writes fig_cluster.csv:
+    metric, mode, scenario, t_wall, n_finished, n_duplicates, value
+
+    PYTHONPATH=src python benchmarks/fig_cluster.py            # full
+    PYTHONPATH=src python benchmarks/fig_cluster.py --dry-run  # smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):           # `python benchmarks/fig_cluster.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import numpy as np
+
+from benchmarks import common
+from repro import api
+from repro.core import simulator
+
+
+def _spec(P: int, mode: str, *, workers=(),
+          n_groups: int = 1) -> api.RunSpec:
+    return api.RunSpec(
+        scheduling=api.SchedulingSpec(technique="FAC"),
+        cluster=api.ClusterSpec(n_workers=P, workers=workers,
+                                name=f"cluster_{mode}"),
+        execution=api.ExecutionSpec(mode=mode, h=0.0 if mode != "virtual"
+                                    else 1e-4,
+                                    n_groups=n_groups,
+                                    stall_timeout=15.0,
+                                    wall_timeout=120.0))
+
+
+def dispatch_overhead(P: int = 4, N: int = 256):
+    """Per-task dispatch cost, threaded vs process (zero-cost tasks)."""
+    tt = np.zeros(N)
+    out = {}
+    for mode in ("threaded", "process"):
+        spec = _spec(P, mode)
+        st = api.run(spec, api.build(spec, simulator.SimBackend(tt),
+                                     n_tasks=N))
+        assert not st.hung and st.n_finished == N
+        out[mode] = st.t_wall / N * 1e6          # us per task
+    return out
+
+
+def resilience_point(P: int = 4, N: int = 256, task_s: float = 0.004):
+    """Baseline vs P-1 real SIGKILLs, plus the virtual twin's forecast."""
+    tt = np.full(N, task_s)
+    kill_at = N * task_s / P * 0.5               # mid-run
+    perturbed = tuple([api.WorkerSpec()]
+                      + [api.WorkerSpec(fail_time=kill_at)] * (P - 1))
+    rows = []
+    for scen, workers in (("baseline", ()), ("fail_p-1", perturbed)):
+        for mode in ("process", "virtual"):
+            spec = _spec(P, mode, workers=workers)
+            r = api.simulate(spec, tt)
+            assert not r.hang and r.n_finished == N, (scen, mode)
+            t = r.t_wall if mode == "process" else r.t_par
+            rows.append((scen, mode, t, r.n_finished, r.n_duplicates))
+    return rows
+
+
+def main(quick: bool = True):
+    P, N = 4, 128 if quick else 512
+    over = dispatch_overhead(P, N)
+    yield f"fig_cluster,dispatch_us_per_task,threaded,{over['threaded']:.1f}"
+    yield f"fig_cluster,dispatch_us_per_task,process,{over['process']:.1f}"
+
+    rows = resilience_point(P, N, 0.004 if quick else 0.002)
+    csv_rows = []
+    t_of = {}
+    for scen, mode, t, fin, dups in rows:
+        t_of[(scen, mode)] = t
+        csv_rows.append(["resilience", mode, scen, f"{t:.4f}", fin, dups,
+                         ""])
+        yield (f"fig_cluster,t_wall,{mode}/{scen},{t:.4f}"
+               f",finished={fin},dups={dups}")
+    for mode in ("process", "virtual"):
+        degr = t_of[("fail_p-1", mode)] / max(t_of[("baseline", mode)],
+                                              1e-9)
+        csv_rows.append(["degradation", mode, "fail_p-1/baseline", "", "",
+                         "", f"{degr:.3f}"])
+        yield f"fig_cluster,degradation_factor,{mode},{degr:.3f}"
+
+    path = common.write_csv(
+        "fig_cluster",
+        ["metric", "mode", "scenario", "t_wall", "n_finished",
+         "n_duplicates", "value"],
+        csv_rows + [["dispatch_us_per_task", m, "", "", "", "",
+                     f"{v:.1f}"] for m, v in over.items()])
+    yield f"fig_cluster,csv,{path}"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="alias for quick mode (CI smoke)")
+    ap.add_argument("--paper", action="store_true")
+    args = ap.parse_args()
+    for line in main(quick=args.dry_run or not args.paper):
+        print(line)

@@ -10,6 +10,9 @@
 5. One spec to run them all: the SAME declarative RunSpec (a JSON-able
    scenario) drives the simulator, the training executor, and the
    serving executor.
+6. Virtual -> threaded -> process: the SAME RunSpec again, escalating
+   from simulated time to OS threads to REAL worker processes — where
+   a declared fail_time becomes an actual mid-run SIGKILL.
 """
 
 import numpy as np
@@ -119,4 +122,33 @@ done5 = sum(r.output is not None for r in reqs5)
 print(f"   serve:     {done5}/{len(reqs5)} requests "
       f"(same spec, first-completion-wins)")
 assert not res5.hung and not st5.hung and done5 == len(reqs5)
+
+print("=== 6. Virtual -> threaded -> process: one spec, three physics ===")
+# The same scenario — 3 workers, worker 1 fail-stops mid-run — escalated
+# through the execution modes.  In threaded mode the worker thread dies
+# at wall-clock fail_time holding its chunk; in process mode the worker
+# is a REAL OS process and the fail-stop is a REAL SIGKILL
+# (repro.cluster.chaos).  Either way rDLB re-issues the victim's
+# in-flight work and every task still completes exactly once.  Virtual
+# mode is the predictive twin: same queue, same completion set,
+# simulated time.  (sleep_per_task gives tasks real duration in the
+# wall-clock modes, so the fail-stop lands mid-run in all three.)
+tt6 = np.full(48, 0.005)
+workers6 = tuple(api.WorkerSpec(sleep_per_task=0.004,
+                                fail_time=0.04 if wid == 1 else None)
+                 for wid in range(3))
+spec6 = api.RunSpec(
+    scheduling=api.SchedulingSpec(technique="FAC"),
+    cluster=api.ClusterSpec(n_workers=3, workers=workers6,
+                            name="one_kill"),
+    execution=api.ExecutionSpec(mode="virtual", stall_timeout=10.0,
+                                wall_timeout=60.0))
+for mode in ("virtual", "threaded", "process"):
+    r6 = api.simulate(spec6.override("execution.mode", mode), tt6)
+    clock = ("virtual" if mode == "virtual" else "wall")
+    kills = {"virtual": "simulated fail-stop", "threaded": "thread dies",
+             "process": "1 REAL SIGKILL"}[mode]
+    print(f"   {mode:9s} {r6.n_finished}/{len(tt6)} tasks, "
+          f"{clock} t={r6.t_par:.3f}s, dups={r6.n_duplicates} [{kills}]")
+    assert not r6.hang and r6.n_finished == len(tt6)
 print("OK")

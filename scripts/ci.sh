@@ -21,4 +21,22 @@ PY
 python -m repro run --spec "$tmp_spec" --dry-run
 rm -f "$tmp_spec"
 python examples/quickstart.py > /dev/null
+# process-cluster smoke: real worker processes, one REAL mid-run SIGKILL,
+# exactly-once completion — under a hard wall-clock guard so a regression
+# can hang CI for at most two minutes
+timeout 120 python - <<'PY'
+import numpy as np
+from repro import api
+tt = np.full(60, 0.004)
+spec = api.RunSpec(
+    scheduling=api.SchedulingSpec(technique="FAC"),
+    cluster=api.ClusterSpec(n_workers=3, workers=(
+        api.WorkerSpec(), api.WorkerSpec(fail_time=0.04),
+        api.WorkerSpec())),
+    execution=api.ExecutionSpec(mode="process", stall_timeout=10.0,
+                                wall_timeout=60.0))
+r = api.simulate(spec, tt)
+assert not r.hang and r.n_finished == 60, (r.t_par, r.n_finished)
+print(f"cluster-smoke,ok,t_wall={r.t_wall:.3f}s,dups={r.n_duplicates}")
+PY
 python -m pytest -x -q "$@"

@@ -68,13 +68,16 @@ def serve_spec(*, technique: str = "SS", n_workers: int = 2,
                                 h=0.0, horizon=100000.0))
 
 
-def make_scheduler(spec: RunSpec, n_tasks: int) -> dls.Technique:
+def make_scheduler(spec: RunSpec, n_tasks: int, *,
+                   n_workers: Optional[int] = None) -> dls.Technique:
     """Build the spec's DLS technique, sized for ``n_tasks`` over the
-    spec's cluster."""
+    spec's cluster (or an explicit ``n_workers`` override — the
+    two-level cluster mode sizes the TOP technique for its group
+    masters instead of the full worker set)."""
     s = spec.scheduling
-    return dls.make_technique(s.technique, max(1, int(n_tasks)),
-                              spec.cluster.n_workers, seed=s.seed,
-                              **s.param_dict())
+    P = n_workers if n_workers is not None else spec.cluster.n_workers
+    return dls.make_technique(s.technique, max(1, int(n_tasks)), P,
+                              seed=s.seed, **s.param_dict())
 
 
 def build(spec: RunSpec, backend: engine.WorkerBackend, *,
@@ -82,19 +85,36 @@ def build(spec: RunSpec, backend: engine.WorkerBackend, *,
           technique: Optional[dls.Technique] = None,
           adaptive: Any = None,
           task_times: Optional[Sequence[float]] = None,
-          queue_cls: type = rdlb.RobustQueue) -> engine.Engine:
-    """RunSpec -> ready-to-run Engine (with its queue and workers).
+          queue_cls: type = rdlb.RobustQueue,
+          factory: Any = None):
+    """RunSpec -> ready-to-run driver (with its queue and workers).
+
+    ``mode="virtual"``/``"threaded"`` build a ``repro.core.engine.Engine``;
+    ``mode="process"`` builds a ``repro.cluster.ClusterRun`` — real OS
+    worker processes around the same RobustQueue (duck-compatible:
+    ``queue``/``workers``/``run()``).  Construction never spawns
+    anything; processes live inside ``run()``.
 
     ``technique`` injects a prebuilt (e.g. pre-warmed) technique instead
     of constructing one from the spec; ``adaptive`` injects a live
     policy object, overriding ``spec.adaptive``; ``task_times`` seeds
     the spec-built adaptive controller's forecast workload (None =
-    unit-cost tasks).
+    unit-cost tasks); ``factory`` is the process-mode child-side runner
+    (derived from ``backend`` when omitted —
+    ``repro.cluster.factory_for_backend``).
     """
     N = n_tasks if n_tasks is not None else spec.n_tasks
     if N is None:
         raise ValueError("spec.n_tasks is unset and no n_tasks was given")
-    tech = technique if technique is not None else make_scheduler(spec, N)
+    e = spec.execution
+    if technique is not None:
+        tech = technique
+    else:
+        # two-level: the TOP queue schedules group-sized chunks, so the
+        # technique is sized for n_groups super-workers (group masters)
+        tech = make_scheduler(
+            spec, N, n_workers=(e.n_groups if e.mode == "process"
+                                and e.n_groups > 1 else None))
     r = spec.robustness
     queue = queue_cls(int(N), tech, rdlb_enabled=r.rdlb_enabled,
                       max_duplicates=r.max_duplicates,
@@ -104,7 +124,15 @@ def build(spec: RunSpec, backend: engine.WorkerBackend, *,
         from repro.adaptive import AdaptiveController  # lazy: no cycle
         policy = AdaptiveController(task_times=task_times,
                                     config=spec.adaptive.to_config())
-    e = spec.execution
+    if e.mode == "process":
+        if policy is not None:
+            raise ValueError(
+                "adaptive re-planning is not supported in process mode "
+                "yet (snapshot/hot-swap assume an in-process engine)")
+        from repro import cluster                       # lazy: no cycle
+        return cluster.ClusterRun(
+            queue, spec, backend, factory=factory,
+            record_feedback=spec.scheduling.feedback)
     return engine.Engine(queue, spec.cluster.engine_workers(), backend,
                          h=e.h, horizon=e.horizon,
                          record_feedback=spec.scheduling.feedback,
@@ -112,12 +140,12 @@ def build(spec: RunSpec, backend: engine.WorkerBackend, *,
                          adaptive=policy)
 
 
-def run(spec: RunSpec, eng: engine.Engine) -> engine.EngineStats:
-    """Run a built engine in the spec's execution mode."""
+def run(spec: RunSpec, eng) -> engine.EngineStats:
+    """Run a built driver in the spec's execution mode."""
     e = spec.execution
     if e.mode == "threaded":
         return eng.run_threaded(poll=e.poll, stall_timeout=e.stall_timeout)
-    return eng.run()
+    return eng.run()       # virtual Engine.run() or ClusterRun.run()
 
 
 def execute(spec: RunSpec, backend: engine.WorkerBackend,
@@ -162,4 +190,5 @@ def simulate(spec: RunSpec, task_times: Sequence[float], *,
         scenario=spec.cluster.name or spec.name or "cluster",
         rdlb=spec.robustness.rdlb_enabled,
         adaptive_decisions=st.adaptive_decisions,
+        t_wall=st.t_wall,
     )

@@ -39,9 +39,9 @@ from repro.core import dls, engine
 SPEC_VERSION = 1
 
 __all__ = [
-    "SPEC_VERSION", "SchedulingSpec", "RobustnessSpec", "WorkerSpec",
-    "ClusterSpec", "ExecutionSpec", "AdaptiveSpec", "Candidate",
-    "DEFAULT_PORTFOLIO", "RunSpec", "spec_override",
+    "SPEC_VERSION", "VALID_MODES", "SchedulingSpec", "RobustnessSpec",
+    "WorkerSpec", "ClusterSpec", "ExecutionSpec", "AdaptiveSpec",
+    "Candidate", "DEFAULT_PORTFOLIO", "RunSpec", "spec_override",
 ]
 
 
@@ -130,6 +130,13 @@ class WorkerSpec:
     fail_after_tasks), and serve-side dead/slow sets (alive /
     sleep_per_task).  ``sleep_per_task`` only matters in threaded mode
     (an injected wall-clock delay); virtual time uses ``speed``.
+
+    ``hang_time`` is a FREEZE instant (paper Fig. 1b): from the
+    scheduler's point of view it is indistinguishable from a fail-stop
+    (the worker never reports again), so virtual/threaded modes fold it
+    into ``fail_time``; the process-cluster runtime compiles it to a
+    real SIGSTOP (the process survives, frozen) where ``fail_time``
+    compiles to SIGKILL.
     """
     speed: float = 1.0
     msg_latency: float = 0.0
@@ -137,6 +144,7 @@ class WorkerSpec:
     fail_after_tasks: Optional[int] = None
     sleep_per_task: float = 0.0
     alive: bool = True
+    hang_time: Optional[float] = None
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "WorkerSpec":
@@ -145,7 +153,8 @@ class WorkerSpec:
                    fail_time=d.get("fail_time"),
                    fail_after_tasks=d.get("fail_after_tasks"),
                    sleep_per_task=float(d.get("sleep_per_task", 0.0)),
-                   alive=bool(d.get("alive", True)))
+                   alive=bool(d.get("alive", True)),
+                   hang_time=d.get("hang_time"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,8 +235,8 @@ class ClusterSpec:
 
     def with_serve_state(self, *, dead: Iterable[int] = (),
                          slow: Optional[Mapping[int, float]] = None,
-                         fail_at: Optional[Mapping[int, int]] = None
-                         ) -> "ClusterSpec":
+                         fail_at: Optional[Mapping[int, int]] = None,
+                         speed_compose: bool = True) -> "ClusterSpec":
         """Overlay serve-side perturbations on this cluster.
 
         ``slow[wid]`` is EXTRA seconds per unit-cost request: it maps to
@@ -236,6 +245,13 @@ class ClusterSpec:
         declared speed — ``1/(1/speed + extra)`` (for a nominal worker,
         the classic ``1/(1+extra)``); slowing an already-slow worker can
         only make it slower.
+
+        ``speed_compose=False`` skips the speed composition and carries
+        the slowdown ONLY as ``sleep_per_task``: required for process
+        mode, where BOTH fields are physically realized (``speed<1``
+        becomes a SIGSTOP/SIGCONT duty cycle, ``sleep_per_task`` a real
+        sleep) — composing into both would apply one declared
+        perturbation twice.
         """
         dead = set(dead)
         slow = dict(slow or {})
@@ -247,7 +263,7 @@ class ClusterSpec:
                 w,
                 alive=w.alive and wid not in dead,
                 fail_after_tasks=fail_at.get(wid, w.fail_after_tasks),
-                speed=(w.speed if extra is None
+                speed=(w.speed if extra is None or not speed_compose
                        else 1.0 / (1.0 / w.speed + extra)),
                 sleep_per_task=(w.sleep_per_task if extra is None
                                 else w.sleep_per_task + extra)))
@@ -260,10 +276,19 @@ class ClusterSpec:
                                      for _ in range(self.n_workers))
 
     def engine_workers(self) -> list:
-        """THE EngineWorker factory (the single perturbation seam)."""
+        """THE EngineWorker factory (the single perturbation seam).
+
+        ``hang_time`` folds into ``fail_time`` here: to the master a
+        frozen worker and a dead one are the same event (it never
+        reports again); only the process runtime distinguishes them
+        physically (SIGSTOP vs SIGKILL — repro.cluster.chaos).
+        """
+        def _stop_at(w):
+            ts = [t for t in (w.fail_time, w.hang_time) if t is not None]
+            return min(ts) if ts else None
         return [engine.EngineWorker(wid, speed=w.speed,
                                     msg_latency=w.msg_latency,
-                                    fail_time=w.fail_time,
+                                    fail_time=_stop_at(w),
                                     fail_after_tasks=w.fail_after_tasks,
                                     sleep_per_task=w.sleep_per_task,
                                     alive=w.alive)
@@ -278,16 +303,32 @@ class ClusterSpec:
 
 
 # ---------------------------------------------------------------- execution
+VALID_MODES = ("virtual", "threaded", "process")
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecutionSpec:
     """How the engine runs the schedule.
 
     ``mode="virtual"`` is the deterministic virtual-time event loop
     (``Engine.run``); ``"threaded"`` is one OS thread per worker
-    (``Engine.run_threaded`` — duplicates race in wall-clock time).
+    (``Engine.run_threaded`` — duplicates race in wall-clock time);
+    ``"process"`` is one real OS process per worker speaking the
+    request/report protocol over a socket to an in-process master
+    (``repro.cluster`` — perturbations become real signals: SIGKILL,
+    SIGSTOP, duty-cycle throttling).
     ``h`` is the master's per-transaction overhead in virtual seconds;
     ``horizon`` bounds virtual time (exceeding it reports a hang);
-    ``poll``/``stall_timeout`` are the threaded-mode polling knobs.
+    ``poll``/``stall_timeout``/``max_fruitless_polls`` are the polling
+    knobs shared by threaded and process modes (``stall_timeout``:
+    seconds without global queue progress before the run is declared
+    hung; ``max_fruitless_polls``: consecutive no-progress polls before
+    the same verdict).
+    ``n_groups > 1`` enables the two-level hierarchy in process mode:
+    group masters each own a contiguous worker subset; the top-level
+    queue schedules group-sized chunks and rDLB re-issues them ACROSS
+    groups.  ``wall_timeout`` is a process-mode hard wall-clock cap
+    (None = rely on stall detection only).
     """
     mode: str = "virtual"
     h: float = 1e-4
@@ -295,11 +336,23 @@ class ExecutionSpec:
     poll: float = 1e-3
     stall_timeout: float = 5.0
     max_fruitless_polls: Optional[int] = None
+    n_groups: int = 1
+    wall_timeout: Optional[float] = None
 
     def __post_init__(self):
-        if self.mode not in ("virtual", "threaded"):
-            raise ValueError(f"mode must be 'virtual' or 'threaded', "
-                             f"got {self.mode!r}")
+        if self.mode not in VALID_MODES:
+            raise ValueError(
+                f"mode must be one of {VALID_MODES}, got {self.mode!r}")
+        if self.n_groups < 1:
+            raise ValueError(f"need n_groups >= 1, got {self.n_groups}")
+        if self.n_groups > 1 and self.mode != "process":
+            # the virtual/threaded engines have no group-master tier; a
+            # silently single-level schedule would invalidate any
+            # twin-prediction comparison against the process run
+            raise ValueError(
+                f"n_groups={self.n_groups} requires mode='process' "
+                f"(the two-level hierarchy only exists in the cluster "
+                f"runtime), got mode={self.mode!r}")
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "ExecutionSpec":
@@ -308,7 +361,9 @@ class ExecutionSpec:
                    horizon=float(d.get("horizon", 1e7)),
                    poll=float(d.get("poll", 1e-3)),
                    stall_timeout=float(d.get("stall_timeout", 5.0)),
-                   max_fruitless_polls=d.get("max_fruitless_polls"))
+                   max_fruitless_polls=d.get("max_fruitless_polls"),
+                   n_groups=int(d.get("n_groups", 1)),
+                   wall_timeout=d.get("wall_timeout"))
 
 
 # ---------------------------------------------------------------- candidate

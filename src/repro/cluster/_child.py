@@ -1,0 +1,33 @@
+"""Fresh-interpreter child entry: ``python -m repro.cluster._child a.pkl``.
+
+The master's launch path for heavyweight runners (``start_method =
+"spawn"``: they rebuild JAX, which must never inherit forked XLA state).
+A plain subprocess running this module instead of multiprocessing's
+spawn start method, because the latter re-executes the parent's
+``__main__`` in every child — wrong (and often fatal) for plain scripts.
+
+Kept out of the package ``__init__`` so runpy executes it as a true
+main module (no double-import warning).
+"""
+
+from __future__ import annotations
+
+import pickle
+import sys
+
+
+def main(argv=None) -> None:
+    from repro.cluster.worker import worker_main
+    with open((argv or sys.argv)[1], "rb") as f:
+        d = pickle.load(f)
+    # the factory (model params, batches — potentially large) is a
+    # SINGLE shared pickle all workers load; the per-worker args file
+    # stays tiny
+    with open(d["factory_path"], "rb") as f:
+        factory = pickle.load(f)
+    worker_main(d["address"], d["wid"], factory,
+                d["sleep_per_task"], d["poll"])
+
+
+if __name__ == "__main__":
+    main()

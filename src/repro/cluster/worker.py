@@ -1,0 +1,123 @@
+"""Worker process: the child side of the process-cluster runtime.
+
+``worker_main`` is the child entry point, reached two ways: forked
+directly for lightweight runners (fast; closure-friendly), or via a
+fresh interpreter (``python -m repro.cluster._child``) for runners that
+declare ``start_method = "spawn"`` — those rebuild JAX, which must never
+inherit forked XLA state, and their arguments must be picklable.  The
+loop speaks exactly the engine's protocol: request -> (assign | wait |
+done); execute; report; repeat.  Workers know nothing about
+perturbations beyond their own injected ``sleep_per_task`` — kills,
+freezes and throttles land as raw signals from the chaos layer,
+undetected, exactly as the paper assumes.
+
+A *runner* is the picklable unit of execution: a callable
+``runner(task_ids) -> {task_id: payload}`` with an optional one-time
+``setup()`` hook that runs in the child (heavyweight imports — JAX,
+model builds — belong there, not at pickle time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Optional, Sequence
+
+from repro.cluster import transport
+
+
+# ------------------------------------------------------------------ runners
+@dataclasses.dataclass
+class NullRunner:
+    """Execution is a no-op (dry runs / pure scheduling measurements)."""
+
+    def __call__(self, tasks: Sequence[int]) -> dict:
+        return {t: None for t in tasks}
+
+
+@dataclasses.dataclass
+class SleepRunner:
+    """Tasks are real wall-clock sleeps of their nominal durations —
+    the process-mode twin of the simulator's virtual task costs (one
+    virtual second = ``scale`` wall seconds)."""
+    task_times: Any = None          # sequence of per-task seconds, or None
+    unit: float = 1.0               # seconds per task when task_times None
+    scale: float = 1.0
+
+    def __call__(self, tasks: Sequence[int]) -> dict:
+        out = {}
+        for t in tasks:
+            dt = (self.unit if self.task_times is None
+                  else float(self.task_times[t])) * self.scale
+            if dt > 0.0:
+                time.sleep(dt)
+            out[t] = None
+        return out
+
+
+@dataclasses.dataclass
+class FnRunner:
+    """Run a picklable ``task_fn(task_id)`` per task (the FnBackend
+    twin; results are committed exactly-once by the master).
+
+    When ``task_times`` is given, each task additionally occupies its
+    NOMINAL duration in real time (sleep after compute) — so a
+    process-mode run realizes the same cost model the virtual twin
+    predicts, not just the same results."""
+    task_fn: Optional[Callable[[int], Any]] = None
+    task_times: Any = None
+
+    def __call__(self, tasks: Sequence[int]) -> dict:
+        out = {}
+        for t in tasks:
+            out[t] = None if self.task_fn is None else self.task_fn(t)
+            if self.task_times is not None:
+                dt = float(self.task_times[t])
+                if dt > 0.0:
+                    time.sleep(dt)
+        return out
+
+
+# -------------------------------------------------------------- child main
+def worker_main(address: str, wid: int, factory: Any,
+                sleep_per_task: float = 0.0, poll: float = 1e-3) -> None:
+    """Child-process entry point: connect, say hello, self-schedule.
+
+    ``factory`` is the runner (already the callable, or anything whose
+    ``setup()`` builds heavy state in-child).  Any exception is reported
+    upward as an ``("error", wid, repr)`` message before exiting, so an
+    errored run surfaces instead of silently hanging the master.
+    """
+    conn = transport.connect(address)
+    try:
+        conn.send(("hello", wid, os.getpid()))
+        runner = factory
+        setup = getattr(runner, "setup", None)
+        if callable(setup):
+            setup()
+        while True:
+            conn.send(("request", wid))
+            msg = conn.recv()
+            if msg is None or msg[0] == "done":
+                return
+            if msg[0] == "wait":
+                time.sleep(msg[1])
+                continue
+            chunk = msg[1]                        # ("assign", Chunk)
+            t0 = time.monotonic()
+            payload = runner(list(chunk.tasks()))
+            if sleep_per_task > 0.0:
+                time.sleep(sleep_per_task * chunk.size)
+            dt = time.monotonic() - t0
+            conn.send(("report", wid, chunk, payload, dt,
+                       {wid: chunk.size}))
+    except transport.TransportError:
+        pass                        # master tore the run down under us
+    except BaseException as e:      # noqa: BLE001 — forward, then die
+        try:
+            conn.send(("error", wid, repr(e)))
+        except transport.TransportError:
+            pass
+    finally:
+        conn.close()

@@ -66,10 +66,14 @@ REQUEST, REQ_ARRIVE, COMPLETE, REP_ARRIVE = 0, 1, 2, 3
 class EngineWorker:
     """Liveness/perturbation state of one worker (PE / replica / group).
 
-    ``fail_time`` is a virtual-time fail-stop instant (simulator
-    scenarios); ``fail_after_tasks`` is a count-based fail-stop (executor
-    fault plans: the worker dies at its next assignment once it has
-    executed that many tasks, holding the chunk).  Both may be set.
+    ``fail_time`` is a fail-stop instant measured on the run's clock:
+    virtual seconds in ``Engine.run()``, WALL seconds from run start in
+    ``run_threaded()`` (the thread dies at that instant, holding any
+    in-flight chunk) and in the process runtime (SIGKILL —
+    repro.cluster.chaos).  ``fail_after_tasks`` is a count-based
+    fail-stop (executor fault plans: the worker dies at its next
+    assignment once it has executed that many tasks, holding the
+    chunk).  Both may be set.
     """
     wid: int
     speed: float = 1.0                      # <1.0 = straggler
@@ -132,6 +136,12 @@ class EngineStats:
     adaptive_decisions: list = dataclasses.field(default_factory=list)
                                  # DecisionRecords when an adaptive policy
                                  # watched the run (repro.adaptive)
+    t_wall: float = 0.0          # wall-clock seconds for the whole run —
+                                 # set in every mode, so virtual, threaded
+                                 # and process runs are directly comparable
+    chaos_events: list = dataclasses.field(default_factory=list)
+                                 # per-worker ChaosEvent log (process mode:
+                                 # real SIGKILL/SIGSTOP/throttle actions)
 
     @property
     def hang(self) -> bool:
@@ -181,6 +191,10 @@ class Engine:
         self.max_fruitless_polls = (max_fruitless_polls
                                     if max_fruitless_polls is not None
                                     else max(256, 64 * P))
+        # threaded/process modes only bound stalls by poll COUNT when the
+        # knob was set explicitly (the derived default is tuned for the
+        # virtual event loop, where polls are free)
+        self._fruitless_explicit = max_fruitless_polls is not None
         self.by_worker: dict[int, int] = {}
         self.assignment_log: list[rdlb.Chunk] = []
         self._commit_lock = threading.Lock()
@@ -198,7 +212,8 @@ class Engine:
         self.by_worker[wid] = self.by_worker.get(wid, 0) + chunk.size
         return payload
 
-    def _stats(self, t_par: float, hung: bool) -> EngineStats:
+    def _stats(self, t_par: float, hung: bool,
+               t_wall: float = 0.0) -> EngineStats:
         P = len(self.workers)
         busy = np.array([w.busy for w in self.workers])
         idle = np.zeros(P)
@@ -221,10 +236,15 @@ class Engine:
             by_worker=dict(self.by_worker), worker_busy=busy,
             worker_idle=idle,
             survivors=[w.wid for w in self.workers if w.alive],
-            assignment_log=list(self.assignment_log),
+            # seq IS the queue's transaction order; in threaded mode the
+            # request -> log-append window lets racing workers append
+            # out of order, so normalize here (no-op for virtual mode)
+            assignment_log=sorted(self.assignment_log,
+                                  key=lambda c: c.seq),
             adaptive_decisions=(list(getattr(self.adaptive, "decisions",
                                              ()))
-                                if self.adaptive is not None else []))
+                                if self.adaptive is not None else []),
+            t_wall=t_wall)
 
     # ---------------------------------------------------- virtual-time mode
     def run(self) -> EngineStats:
@@ -233,6 +253,7 @@ class Engine:
         queue = self.queue
         workers = self._by_wid
         h = self.h
+        wall0 = time.monotonic()
         if self.adaptive is not None:
             self.adaptive.bind(self)       # may re-plan at t=0
         master_free = 0.0
@@ -339,7 +360,8 @@ class Engine:
 
         done = queue.done and not hung
         t_par = t_done if done else math.inf
-        return self._stats(t_par, not done)
+        return self._stats(t_par, not done,
+                           t_wall=time.monotonic() - wall0)
 
     # ------------------------------------------------------- threaded mode
     def run_threaded(self, *, poll: float = 1e-3,
@@ -349,9 +371,21 @@ class Engine:
 
         ``stall_timeout``: seconds a worker may poll fruitlessly (no
         global queue progress) before giving up — the Fig.-1b hang
-        surfaced in finite time.
+        surfaced in finite time.  ``self.max_fruitless_polls`` bounds
+        the same stall in poll COUNTS (the ExecutionSpec knob works in
+        both engine modes): whichever limit trips first ends the wait.
+
+        ``fail_time`` (and the spec layer's ``hang_time``, folded into
+        it) is interpreted as WALL seconds from run start: the worker
+        thread fail-stops at that instant — mid-chunk it dies holding
+        the chunk (never reports), exactly like a killed process.
         """
         queue = self.queue
+        # The count-based bound must never undercut the wall-clock one
+        # for default knobs: only an explicit ExecutionSpec override
+        # (max_fruitless_polls is not None) tightens it.
+        max_polls = (self.max_fruitless_polls if self._fruitless_explicit
+                     else math.inf)
         t0 = time.monotonic()
         errors: list[BaseException] = []
         if self.adaptive is not None:
@@ -363,8 +397,19 @@ class Engine:
         def worker_loop(w: EngineWorker) -> None:
             last_progress = progress_mark()
             stall_start = None
+            fruitless = 0
+
+            def failed_now() -> bool:
+                if (w.fail_time is not None
+                        and time.monotonic() - t0 >= w.fail_time):
+                    w.alive = False
+                    return True
+                return False
+
             while True:
                 if queue.done:
+                    return
+                if failed_now():
                     return
                 chunk = queue.request(w.wid)
                 if chunk is None:
@@ -372,34 +417,48 @@ class Engine:
                         return
                     # NOTE: don't consult queue.wait_hint here — it is a
                     # shared scratch field another thread's request() may
-                    # clobber; derive the barrier state directly.
-                    if (not queue.rdlb_enabled
-                            and queue.all_scheduled
-                            and not queue.at_batch_barrier):
+                    # clobber; the property derives barrier state fresh.
+                    if queue.nonrobust_dead_end:
                         return        # non-robust: would block forever
                     mark = progress_mark()
                     if mark != last_progress:
                         last_progress, stall_start = mark, None
+                        fruitless = 0
                     elif stall_start is None:
                         stall_start = time.monotonic()
-                    elif time.monotonic() - stall_start > stall_timeout:
-                        return        # livelock (e.g. capped dup on a
+                        fruitless = 1
+                    else:
+                        fruitless += 1
+                        if (time.monotonic() - stall_start > stall_timeout
+                                or fruitless > max_polls):
+                            return    # livelock (e.g. capped dup on a
                                       # dead worker): surface the hang
                     time.sleep(poll)
                     continue
                 stall_start = None
+                fruitless = 0
                 with self._commit_lock:
                     self.assignment_log.append(chunk)
                 if w.fails_by_count():
                     w.alive = False   # dies holding the chunk
                     return
                 t_exec0 = time.monotonic()
-                payload = self._execute(chunk, w.wid)
+                payload = self.backend.execute(chunk, w.wid)
                 if w.sleep_per_task > 0.0:
                     time.sleep(w.sleep_per_task * chunk.size)
+                if failed_now():
+                    return            # dies holding the chunk: the
+                                      # report never happens, rDLB must
+                                      # re-issue it elsewhere, and NO
+                                      # work is credited (tasks_done /
+                                      # by_worker count reported work
+                                      # only — same as a killed process)
                 w.busy += time.monotonic() - t_exec0
                 w.last_done = time.monotonic() - t0
                 with self._commit_lock:
+                    w.tasks_done += chunk.size
+                    self.by_worker[w.wid] = (self.by_worker.get(w.wid, 0)
+                                             + chunk.size)
                     newly = queue.report_tasks(chunk)
                     self.backend.commit(chunk, w.wid, payload, newly)
                     self._feedback(chunk, time.monotonic() - t_exec0, 0.0)
@@ -428,4 +487,4 @@ class Engine:
             raise errors[0]
         wall = time.monotonic() - t0
         hung = not queue.done
-        return self._stats(math.inf if hung else wall, hung)
+        return self._stats(math.inf if hung else wall, hung, t_wall=wall)

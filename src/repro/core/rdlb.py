@@ -148,6 +148,15 @@ class RobustQueue:
             return False
         return self._n_finished < self._next_unscheduled
 
+    @property
+    def nonrobust_dead_end(self) -> bool:
+        """True when a worker can NEVER receive work again: re-issue is
+        off, everything is scheduled, and no barrier will clear (the
+        paper's Fig.-1b wait-forever state).  Shared by the threaded
+        and process release paths so their semantics cannot drift."""
+        return (not self.rdlb_enabled and self.all_scheduled
+                and not self.at_batch_barrier)
+
     def request(self, pe: int) -> Optional[Chunk]:
         """A free PE asks for work.  Returns a Chunk or None.
 

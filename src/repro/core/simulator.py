@@ -45,6 +45,9 @@ class SimResult:
     adaptive_decisions: list = dataclasses.field(default_factory=list)
                                  # DecisionRecords when an adaptive policy
                                  # watched the run (spec.adaptive.enabled)
+    t_wall: float = 0.0          # wall-clock seconds (== t_par only in
+                                 # threaded/process modes, where time IS
+                                 # wall time)
 
     @property
     def hang(self) -> bool:

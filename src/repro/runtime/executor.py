@@ -158,6 +158,7 @@ class RDLBTrainExecutor:
         self.adaptive = adaptive
         self.opt = make_optimizer(optimizer, lr=lr)
         self.grad_clip = grad_clip
+        self._custom_loss = loss_fn is not None
         base_loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
         self._grad_fn = jax.jit(jax.value_and_grad(base_loss))
         self.reset_workers()
@@ -199,8 +200,28 @@ class RDLBTrainExecutor:
         backend = TrainBackend(
             lambda t: self._grad_fn(params, self._task_batch(batch, t)),
             exact_accumulation=self.exact_accumulation)
+        factory = None
+        if spec.execution.mode == "process":
+            # workers as real OS processes: the jitted closure cannot
+            # cross the boundary, so ship the RECIPE (config + numpy
+            # params/batch) and let the child rebuild grad_fn; grads
+            # come back as numpy and accumulate exactly-once as usual.
+            # NOTE: every step spawns fresh interpreters that re-import
+            # JAX and re-jit (seconds per worker) — process mode is the
+            # fault-tolerance testbed, not a fast multi-step training
+            # path; a persistent worker pool is future work
+            from repro.cluster import TrainTaskRunner  # lazy import
+            cfg = getattr(self.model, "cfg", None)
+            if cfg is None or self._custom_loss:
+                raise ValueError(
+                    "process mode needs a model with .cfg (rebuildable "
+                    "via models.build_model) and the default loss path")
+            import numpy as np
+            factory = TrainTaskRunner(
+                cfg, jax.tree_util.tree_map(np.asarray, params),
+                jax.tree_util.tree_map(np.asarray, batch), self.n_tasks)
         eng = api.build(spec, backend, n_tasks=self.n_tasks,
-                        adaptive=self.adaptive)
+                        adaptive=self.adaptive, factory=factory)
         for ew, w in zip(eng.workers, self.workers):
             ew.tasks_done = w.tasks_done     # count-based fail-stop state
         stats = api.run(spec, eng)

@@ -63,6 +63,58 @@ def _pad_pow2(n: int) -> int:
     return p
 
 
+def greedy_decode_group(model, params, decode_step, prompts: np.ndarray,
+                        max_new: int) -> np.ndarray:
+    """Greedy-decode a (B, S) group of equal-length prompts as one
+    padded jitted batch: B is padded to a power of two (bounded jit
+    recompiles); pad rows replicate row 0 and are discarded.
+
+    Rows are independent through attention/cache, so batched decode is
+    interchangeable with the per-request loop.  Module-level because the
+    process-cluster runner (repro.cluster.runners.ServeTaskRunner) runs
+    the SAME code in the worker process — outputs stay token-identical
+    across execution modes.
+    """
+    B, S = prompts.shape
+    Bp = _pad_pow2(B)
+    total = S + max_new
+    toks = np.empty((Bp, total), dtype=np.int32)
+    toks[:B, :S] = prompts
+    toks[B:, :S] = prompts[0]
+    cache = model.init_cache(Bp, total)
+    for pos in range(total - 1):
+        tok = jnp.asarray(toks[:, pos:pos + 1])
+        logits, cache = decode_step(params, cache, tok, jnp.int32(pos))
+        if pos >= S - 1:
+            toks[:, pos + 1] = np.asarray(
+                jnp.argmax(logits[:, -1, :], axis=-1), dtype=np.int32)
+    return toks[:B, S:]
+
+
+def decode_request_groups(model, params, decode_step, reqs: list,
+                          *, batch_decode: bool = True) -> dict:
+    """Decode a chunk of requests -> {rid: tokens}.
+
+    Batched mode groups by (prompt_len, max_new_tokens) — each group is
+    one padded batch call; singleton shapes fall out naturally."""
+    if not batch_decode:
+        return {r.rid: greedy_decode_group(model, params, decode_step,
+                                           r.prompt[None, :],
+                                           r.max_new_tokens)[0]
+                for r in reqs}
+    groups: dict[tuple, list] = {}
+    for r in reqs:
+        groups.setdefault((len(r.prompt), r.max_new_tokens), []).append(r)
+    out: dict[int, np.ndarray] = {}
+    for (S, max_new), rs in groups.items():
+        prompts = np.stack([r.prompt for r in rs]).astype(np.int32)
+        toks = greedy_decode_group(model, params, decode_step, prompts,
+                                   max_new)
+        for r, t in zip(rs, toks):
+            out[r.rid] = t
+    return out
+
+
 class RDLBServeExecutor:
     """Robust continuous batching, configured by a declarative
     :class:`repro.api.RunSpec` (``spec=``).
@@ -121,51 +173,17 @@ class RDLBServeExecutor:
     def _generate(self, req: Request) -> np.ndarray:
         """Greedy decode, one request at a time (the pre-batching path,
         kept as the ``batch_decode=False`` baseline)."""
-        out = self._generate_group(req.prompt[None, :], req.max_new_tokens)
-        return out[0]
-
-    def _generate_group(self, prompts: np.ndarray,
-                        max_new: int) -> np.ndarray:
-        """Greedy-decode a (B, S) group of equal-length prompts as one
-        padded jitted batch: B is padded to a power of two (bounded jit
-        recompiles); pad rows replicate row 0 and are discarded.
-
-        Rows are independent through attention/cache, so batched decode
-        is interchangeable with the per-request loop."""
-        B, S = prompts.shape
-        Bp = _pad_pow2(B)
-        total = S + max_new
-        toks = np.empty((Bp, total), dtype=np.int32)
-        toks[:B, :S] = prompts
-        toks[B:, :S] = prompts[0]
-        cache = self.model.init_cache(Bp, total)
-        for pos in range(total - 1):
-            tok = jnp.asarray(toks[:, pos:pos + 1])
-            logits, cache = self._decode(self.params, cache, tok,
-                                         jnp.int32(pos))
-            if pos >= S - 1:
-                toks[:, pos + 1] = np.asarray(
-                    jnp.argmax(logits[:, -1, :], axis=-1), dtype=np.int32)
-        return toks[:B, S:]
+        return greedy_decode_group(self.model, self.params, self._decode,
+                                   req.prompt[None, :],
+                                   req.max_new_tokens)[0]
 
     def _generate_chunk(self, reqs: list[Request]) -> dict:
-        """Decode a chunk of requests -> {rid: tokens}.
-
-        Batched mode groups by (prompt_len, max_new_tokens) — each group
-        is one padded batch call; singleton shapes fall out naturally."""
-        if not self.batch_decode:
-            return {r.rid: self._generate(r) for r in reqs}
-        groups: dict[tuple, list[Request]] = {}
-        for r in reqs:
-            groups.setdefault((len(r.prompt), r.max_new_tokens),
-                              []).append(r)
-        out: dict[int, np.ndarray] = {}
-        for (S, max_new), rs in groups.items():
-            prompts = np.stack([r.prompt for r in rs]).astype(np.int32)
-            toks = self._generate_group(prompts, max_new)
-            for r, t in zip(rs, toks):
-                out[r.rid] = t
-        return out
+        """Decode a chunk of requests -> {rid: tokens} (module-level
+        ``decode_request_groups`` — shared with the process-mode child
+        runner, so every mode decodes identically)."""
+        return decode_request_groups(self.model, self.params,
+                                     self._decode, reqs,
+                                     batch_decode=self.batch_decode)
 
     # -------------------------------------------------------------- serve
     def serve(self, requests: list[Request],
@@ -174,21 +192,42 @@ class RDLBServeExecutor:
               concurrent: Optional[bool] = None) -> ServeStats:
         """Process a batch of requests; fail_at: {wid: after_n_requests}."""
         N = len(requests)
+        spec = self.spec
+        if concurrent is not None:
+            spec = spec.override("execution.mode",
+                                 "threaded" if concurrent else "virtual")
         # One perturbation vocabulary: dead/slow/fail_at overlay onto the
         # spec cluster via ClusterSpec.with_serve_state — slow (extra
         # seconds per request) maps to BOTH modes there: a real sleep in
         # threaded mode, a speed divisor in virtual time (nominal cost is
-        # 1 virtual second per request).
-        cluster = self.spec.cluster.with_serve_state(
-            dead=self.dead, slow=self.slow, fail_at=fail_at or {})
-        spec = self.spec.replace(cluster=cluster, n_tasks=N)
+        # 1 virtual second per request).  Process mode realizes both
+        # fields physically, so the overlay skips the speed composition
+        # there (speed_compose=False: sleep_per_task alone carries it).
+        cluster = spec.cluster.with_serve_state(
+            dead=self.dead, slow=self.slow, fail_at=fail_at or {},
+            speed_compose=spec.execution.mode != "process")
+        spec = spec.replace(cluster=cluster, n_tasks=N)
         if max_rounds is not None:
             spec = spec.override("execution.horizon", float(max_rounds))
-        if concurrent is not None:
-            spec = spec.override("execution.mode",
-                                 "threaded" if concurrent else "virtual")
         backend = ServeBackend(requests, self._generate_chunk)
-        eng = api.build(spec, backend, n_tasks=N, adaptive=self.adaptive)
+        factory = None
+        if spec.execution.mode == "process":
+            # replicas as real OS processes: ship the decode RECIPE
+            # (config + numpy params + request triples); the child
+            # rebuilds the model and runs the same grouped decode
+            from repro.cluster import ServeTaskRunner  # lazy import
+            cfg = getattr(self.model, "cfg", None)
+            if cfg is None:
+                raise ValueError("process mode needs a model with .cfg "
+                                 "(rebuildable via models.build_model)")
+            params_np = jax.tree_util.tree_map(np.asarray, self.params)
+            factory = ServeTaskRunner(
+                cfg, params_np,
+                [(r.rid, np.asarray(r.prompt, dtype=np.int32),
+                  int(r.max_new_tokens)) for r in requests],
+                batch_decode=self.batch_decode)
+        eng = api.build(spec, backend, n_tasks=N, adaptive=self.adaptive,
+                        factory=factory)
         stats = api.run(spec, eng)
         for ew in eng.workers:              # fail-stops persist
             if not ew.alive:

@@ -274,6 +274,42 @@ def test_idle_clamped_at_last_completion_for_count_based_failstop():
     assert st2.worker_idle[1] == 0.0
 
 
+# ------------------------------------ threaded-knob plumbing (ExecutionSpec)
+def test_threaded_knobs_plumbed_from_spec():
+    """Satellite: poll / stall_timeout / max_fruitless_polls flow from
+    ExecutionSpec through api.run into the threaded loop — an explicit
+    tiny max_fruitless_polls surfaces a stall by poll COUNT, well
+    before the wall-clock stall_timeout.
+
+    The stall is an AWF-B batch-weight barrier that can never clear:
+    worker 1 dies holding a chunk the barrier is waiting on, and with
+    rDLB off nothing re-issues it.  At a barrier workers keep polling
+    (they do NOT take the non-robust dead-end exit), so the ONLY
+    sub-stall_timeout way out is the fruitless poll counter — if that
+    plumbing broke, this run would last the full 30 s and fail the
+    wall-clock bound below."""
+    import time
+    from repro import api
+    N = 8
+    tt = np.full(N, 0.01)
+    spec = api.RunSpec(
+        scheduling=api.SchedulingSpec(technique="AWF-B"),
+        robustness=api.RobustnessSpec(rdlb_enabled=False),
+        cluster=api.ClusterSpec(
+            n_workers=2,
+            workers=(api.WorkerSpec(sleep_per_task=0.01),
+                     api.WorkerSpec(fail_after_tasks=1))),
+        execution=api.ExecutionSpec(mode="threaded", poll=0.005,
+                                    stall_timeout=30.0,
+                                    max_fruitless_polls=5))
+    eng = api.build(spec, simulator.SimBackend(tt), n_tasks=N)
+    assert eng.max_fruitless_polls == 5      # reached the engine
+    t0 = time.monotonic()
+    st = api.run(spec, eng)
+    assert st.hung
+    assert time.monotonic() - t0 < 10.0
+
+
 # ------------------------------------------------------------ stats shape
 def test_engine_stats_coherent():
     N, P = 32, 4
