@@ -7,6 +7,45 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m compileall -q src
 python benchmarks/fig_adaptive.py --dry-run
+# perf-smoke gate: the array-native core must finish a fixed
+# P=512/N=65536 SS simulation well inside a generous wall budget —
+# catches accidental re-introduction of per-task Python loops in the
+# flag/re-issue hot path.  Hard `timeout` so a regression cannot wedge CI.
+timeout 60 python - <<'PY'
+import time
+import numpy as np
+from repro import api
+from repro.core import faults
+tt = np.full(65536, 0.01)
+spec = api.RunSpec(
+    scheduling=api.SchedulingSpec(technique="SS"),
+    cluster=api.ClusterSpec.from_scenario(faults.baseline(512)),
+    execution=api.ExecutionSpec(h=1e-4))
+t0 = time.perf_counter()
+r = api.simulate(spec, tt)
+dt = time.perf_counter() - t0
+assert not r.hang and r.n_finished == 65536, (r.t_par, r.n_finished)
+assert dt < 10.0, f"perf-smoke regression: {dt:.2f}s for P=512/N=65536"
+print(f"perf-smoke,ok,wall={dt:.3f}s,assignments={r.n_assignments}")
+# and the SCALAR event loop (a straggler declines fast-forward): the
+# per-chunk constant must stay bounded too
+sc = faults.pe_perturbation(512, node_size=16, node=1, slowdown=0.25)
+spec2 = api.RunSpec(
+    scheduling=api.SchedulingSpec(technique="SS"),
+    cluster=api.ClusterSpec.from_scenario(sc),
+    execution=api.ExecutionSpec(h=1e-4))
+tt2 = np.full(16384, 0.01)
+t0 = time.perf_counter()
+r2 = api.simulate(spec2, tt2)
+dt2 = time.perf_counter() - t0
+assert not r2.hang and r2.n_finished == 16384, (r2.t_par, r2.n_finished)
+assert dt2 < 10.0, f"scalar-loop regression: {dt2:.2f}s for P=512/N=16384"
+print(f"perf-smoke,scalar,wall={dt2:.3f}s,assignments={r2.n_assignments}")
+PY
+# perf trajectory: machine-readable BENCH_*.json every CI run (small:
+# fig_scale dry-run writes BENCH_scale.json, theory is seconds-cheap)
+timeout 120 python benchmarks/fig_scale.py --dry-run
+timeout 300 python -m benchmarks.run --only theory --emit-json > /dev/null
 # spec-layer smokes: the facade, the CLI, and the examples cannot rot
 tmp_spec=$(mktemp /tmp/rdlb_spec_XXXXXX.json)
 python - "$tmp_spec" <<'PY'

@@ -35,6 +35,8 @@ import math
 import random
 from typing import Optional
 
+import numpy as np
+
 ALL_TECHNIQUES = (
     "STATIC", "SS", "FSC", "mFSC", "GSS", "TSS", "FAC", "WF", "RAND",
     "AWF-B", "AWF-C", "AWF-D", "AWF-E", "AF",
@@ -135,6 +137,21 @@ class Technique:
         self._batch_left = 0
         self._batch_chunk = 0
         self._batch_index = 0
+        # Adaptive techniques mirror the per-PE measurements into flat
+        # numpy arrays so a chunk-size request costs one vectorized pass
+        # instead of an O(P) Python loop (the array-friendly interface;
+        # at P=1024 this is the difference between a sweep-friendly and
+        # a sweep-hostile technique).  Rows refresh in ``record`` /
+        # ``adopt_stats`` — the two in-tree mutation seams for
+        # ``self.stats``; code mutating a PEStats object directly must
+        # call ``refresh_stat_arrays`` afterwards.
+        if self.adaptive:
+            self._a_n = np.zeros(P, dtype=np.int64)   # samples per PE
+            self._a_mean = np.zeros(P)                # mean iter time
+            self._a_rate = np.zeros(P)                # iters/s, compute only
+            self._a_rate_oh = np.zeros(P)             # iters/s incl overhead
+            self._a_vm = np.zeros(P)                  # var/mean (AF's D terms)
+            self._a_inv = np.zeros(P)                 # 1/mean (AF's T terms)
 
     # ------------------------------------------------------------------ API
     def next_chunk(self, pe: int, remaining: int) -> int:
@@ -147,6 +164,8 @@ class Technique:
                sched_time: float = 0.0) -> None:
         """Feed back a completed chunk (adaptive techniques learn from it)."""
         self.stats[pe].record_chunk(size, compute_time, sched_time)
+        if self.adaptive:
+            self._refresh_stat_row(pe)
 
     def adopt_stats(self, stats: list["PEStats"],
                     time_scale: float = 1.0) -> None:
@@ -158,6 +177,63 @@ class Technique:
         """
         for i in range(min(self.P, len(stats))):
             self.stats[i] = stats[i].scaled_copy(time_scale)
+        self.refresh_stat_arrays()
+
+    # ---------------------------------------------- stat-array mirror
+    def _refresh_stat_row(self, pe: int) -> None:
+        s = self.stats[pe]
+        self._a_n[pe] = s.n_samples
+        mean = s.mean_iter_time
+        self._a_mean[pe] = mean
+        self._a_rate[pe] = s.rate(False)
+        self._a_rate_oh[pe] = s.rate(True)
+        if mean > 0.0:
+            self._a_vm[pe] = s.var_iter_time / mean
+            self._a_inv[pe] = 1.0 / mean
+        else:
+            self._a_vm[pe] = 0.0
+            self._a_inv[pe] = 0.0
+
+    def refresh_stat_arrays(self) -> None:
+        """Re-mirror every ``self.stats`` entry into the flat arrays
+        (call after mutating PEStats objects outside record/adopt)."""
+        if self.adaptive:
+            for pe in range(self.P):
+                self._refresh_stat_row(pe)
+
+    # ----------------------------------------------- batched interface
+    def fixed_chunk(self) -> Optional[int]:
+        """The CONSTANT upcoming chunk size (pre remaining-clamp), or
+        None when sizes vary.  Techniques whose every chunk is the same
+        size (SS, STATIC, mFSC, FSC) advertise it here so the engine's
+        vectorized fast-forward can schedule whole rounds without a
+        per-chunk Python call."""
+        return None
+
+    def bulk_sizes(self, remaining: int,
+                   max_chunks: int) -> Optional[np.ndarray]:
+        """Sizes of the next ``k <= max_chunks`` chunks as one array, or
+        None when sizes depend on the requesting PE or on feedback
+        (WF with non-uniform weights, AWF-*, AF).
+
+        Semantics are exactly ``k`` successive ``next_chunk`` calls —
+        including the [1, remaining-at-that-point] clamp — and any
+        internal state (TSS ramp index, FAC batch accounting, RAND rng)
+        advances identically, so callers MUST consume every returned
+        chunk.  Stops early when ``remaining`` runs out.
+        """
+        if remaining <= 0 or max_chunks <= 0:
+            return np.zeros(0, dtype=np.int64)
+        c = self.fixed_chunk()
+        if c is None:
+            return None
+        c = max(1, int(c))
+        n_full, tail = divmod(remaining, c)
+        n = min(max_chunks, n_full + (1 if tail else 0))
+        sizes = np.full(n, c, dtype=np.int64)
+        if n == n_full + 1:
+            sizes[-1] = tail
+        return sizes
 
     # ------------------------------------------------------ helpers
     def _chunk(self, pe: int, remaining: int) -> int:
@@ -178,13 +254,18 @@ class Technique:
         return size
 
     def _learned_weight(self, pe: int, include_overhead: bool) -> float:
-        """AWF weight: PE rate normalized so that weights sum to P."""
-        rates = [s.rate(include_overhead) for s in self.stats]
-        if rates[pe] <= 0.0:
+        """AWF weight: PE rate normalized so that weights sum to P.
+
+        One vectorized pass over the stat-array mirror — O(P) numpy, no
+        per-PE Python loop (identical semantics to ``PEStats.rate``).
+        """
+        rates = self._a_rate_oh if include_overhead else self._a_rate
+        r_pe = float(rates[pe])
+        if r_pe <= 0.0:
             return 1.0
-        live = [r for r in rates if r > 0.0]
-        mean_rate = sum(live) / len(live)
-        return rates[pe] / mean_rate
+        n_live = int(np.count_nonzero(rates))     # rates are never < 0
+        mean_rate = float(rates.sum()) / n_live
+        return r_pe / mean_rate
 
 
 # ---------------------------------------------------------------- concrete
@@ -194,6 +275,9 @@ class Static(Technique):
     def _chunk(self, pe: int, remaining: int) -> int:
         return math.ceil(self.N / self.P)
 
+    def fixed_chunk(self) -> Optional[int]:
+        return math.ceil(self.N / self.P)
+
 
 class SS(Technique):
     name = "SS"
@@ -201,11 +285,17 @@ class SS(Technique):
     def _chunk(self, pe: int, remaining: int) -> int:
         return 1
 
+    def fixed_chunk(self) -> Optional[int]:
+        return 1
+
 
 class FSC(Technique):
     name = "FSC"
 
     def _chunk(self, pe: int, remaining: int) -> int:
+        return self.fixed_chunk()
+
+    def fixed_chunk(self) -> int:
         logp = max(math.log(self.P), 1e-9)
         num = math.sqrt(2.0) * self.N * self.h
         den = max(self.sigma * self.P * math.sqrt(logp), 1e-12)
@@ -234,12 +324,26 @@ class MFSC(Technique):
     def _chunk(self, pe: int, remaining: int) -> int:
         return self._size
 
+    def fixed_chunk(self) -> int:
+        return self._size
+
 
 class GSS(Technique):
     name = "GSS"
 
     def _chunk(self, pe: int, remaining: int) -> int:
         return math.ceil(remaining / self.P)
+
+    def bulk_sizes(self, remaining: int,
+                   max_chunks: int) -> Optional[np.ndarray]:
+        # deterministic recurrence R -> R - ceil(R/P): one scalar step
+        # per CHUNK (not per task), geometric decay
+        out, R = [], remaining
+        while R > 0 and len(out) < max_chunks:
+            size = math.ceil(R / self.P)
+            out.append(size)
+            R -= size
+        return np.asarray(out, dtype=np.int64)
 
 
 class TSS(Technique):
@@ -258,6 +362,52 @@ class TSS(Technique):
         self._i += 1
         return size
 
+    def bulk_sizes(self, remaining: int,
+                   max_chunks: int) -> Optional[np.ndarray]:
+        # linear ramp is closed-form in the chunk index; replicate the
+        # per-call round + [1, remaining] clamp cumulatively
+        if remaining <= 0 or max_chunks <= 0:
+            return np.zeros(0, dtype=np.int64)
+        idx = self._i + np.arange(max_chunks, dtype=np.int64)
+        raw = np.rint(self.f - idx * self.delta).astype(np.int64)
+        np.maximum(raw, 1, out=raw)
+        cum = np.cumsum(raw)
+        cut = int(np.searchsorted(cum, remaining))
+        if cut < len(raw):                     # remaining runs out here
+            sizes = raw[:cut + 1].copy()
+            sizes[cut] = remaining - (int(cum[cut - 1]) if cut else 0)
+        else:
+            sizes = raw
+        self._i += len(sizes)
+        return sizes
+
+
+def _bulk_batch_sizes(tech: "Technique", remaining: int,
+                      max_chunks: int) -> np.ndarray:
+    """Vectorized unit-weight ``_next_batch_chunk`` sequence: whole
+    batches at a time (sizes within a batch are constant except the
+    final partial chunk), advancing the technique's batch state exactly
+    as ``max_chunks`` sequential calls would."""
+    parts, emitted, R = [], 0, remaining
+    while R > 0 and emitted < max_chunks:
+        if tech._batch_left <= 0:
+            tech._batch_left = math.ceil(R / 2)
+            tech._batch_chunk = max(1, math.ceil(tech._batch_left / tech.P))
+            tech._batch_index += 1
+        c = tech._batch_chunk
+        n_full, tail = divmod(tech._batch_left, c)
+        n = min(max_chunks - emitted, n_full + (1 if tail else 0))
+        sizes = np.full(n, c, dtype=np.int64)
+        if n == n_full + 1:
+            sizes[-1] = tail
+        granted = int(sizes.sum())
+        tech._batch_left -= granted
+        R -= granted
+        emitted += n
+        parts.append(sizes)
+    return (np.concatenate(parts) if parts
+            else np.zeros(0, dtype=np.int64))
+
 
 class FAC(Technique):
     name = "FAC"
@@ -265,12 +415,22 @@ class FAC(Technique):
     def _chunk(self, pe: int, remaining: int) -> int:
         return self._next_batch_chunk(remaining)
 
+    def bulk_sizes(self, remaining: int,
+                   max_chunks: int) -> Optional[np.ndarray]:
+        return _bulk_batch_sizes(self, remaining, max_chunks)
+
 
 class WF(Technique):
     name = "WF"
 
     def _chunk(self, pe: int, remaining: int) -> int:
         return self._next_batch_chunk(remaining, self.weights[pe])
+
+    def bulk_sizes(self, remaining: int,
+                   max_chunks: int) -> Optional[np.ndarray]:
+        if any(w != 1.0 for w in self.weights):
+            return None                # sizes depend on the requesting PE
+        return _bulk_batch_sizes(self, remaining, max_chunks)
 
 
 class Rand(Technique):
@@ -280,6 +440,19 @@ class Rand(Technique):
         lo = max(1, math.floor(self.N / (100 * self.P)))
         hi = max(lo, math.ceil(self.N / (2 * self.P)))
         return self.rng.randint(lo, hi)
+
+    def bulk_sizes(self, remaining: int,
+                   max_chunks: int) -> Optional[np.ndarray]:
+        # the rng sequence is deterministic and PE-independent; one rng
+        # draw per CHUNK (chunks are ~N/(100P) tasks or larger)
+        lo = max(1, math.floor(self.N / (100 * self.P)))
+        hi = max(lo, math.ceil(self.N / (2 * self.P)))
+        out, R = [], remaining
+        while R > 0 and len(out) < max_chunks:
+            size = min(self.rng.randint(lo, hi), R)
+            out.append(size)
+            R -= size
+        return np.asarray(out, dtype=np.int64)
 
 
 class AWF(Technique):
@@ -337,15 +510,16 @@ class AF(Technique):
     adaptive = True
 
     def _chunk(self, pe: int, remaining: int) -> int:
-        mus = [s.mean_iter_time for s in self.stats]
-        if self.stats[pe].n_samples < 2 or mus[pe] <= 0.0:
+        # D and T come from per-PE contribution arrays maintained
+        # incrementally in record() — two vectorized sums per request,
+        # no O(P) Python loop
+        mu_pe = float(self._a_mean[pe])
+        if self._a_n[pe] < 2 or mu_pe <= 0.0:
             return self._next_batch_chunk(remaining)
-        live = [(s.mean_iter_time, s.var_iter_time)
-                for s in self.stats if s.mean_iter_time > 0.0]
-        D = sum(v / m for m, v in live)
-        inv = sum(1.0 / m for m, _ in live)
+        D = float(self._a_vm.sum())
+        inv = float(self._a_inv.sum())
         T = remaining / max(inv, 1e-12)
-        c = (D + 2.0 * T - math.sqrt(D * D + 4.0 * D * T)) / (2.0 * mus[pe])
+        c = (D + 2.0 * T - math.sqrt(D * D + 4.0 * D * T)) / (2.0 * mu_pe)
         return max(1, math.floor(c))
 
 

@@ -52,7 +52,7 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core import rdlb
+from repro.core import fastpath, rdlb
 
 # Event kinds.  *_ARRIVE are master-side (message already in flight —
 # processed even if the sender died after sending); REQUEST/COMPLETE are
@@ -142,6 +142,9 @@ class EngineStats:
     chaos_events: list = dataclasses.field(default_factory=list)
                                  # per-worker ChaosEvent log (process mode:
                                  # real SIGKILL/SIGSTOP/throttle actions)
+    fast_forwarded: int = 0      # chunks handled by the vectorized
+                                 # fast-forward (repro.core.fastpath);
+                                 # 0 when the scalar event loop ran alone
 
     @property
     def hang(self) -> bool:
@@ -196,8 +199,19 @@ class Engine:
         # virtual event loop, where polls are free)
         self._fruitless_explicit = max_fruitless_polls is not None
         self.by_worker: dict[int, int] = {}
+        # Append-log kept ONLY when the queue cannot produce its own
+        # (ReferenceQueue oracle runs) — the array-native queue owns the
+        # log, and retaining a second per-chunk object list would cost
+        # exactly what the lazy ChunkLog saves.  Live introspection
+        # should use ``queue.n_assignments`` / ``queue.chunk_log()``.
+        self._keep_append_log = not hasattr(queue, "chunk_log")
         self.assignment_log: list[rdlb.Chunk] = []
         self._commit_lock = threading.Lock()
+        # A base-class commit is a no-op: reports then only need the
+        # newly-finished COUNT, not the id list (the timing-only hot path)
+        self._trivial_commit = (type(backend).commit
+                                is WorkerBackend.commit)
+        self._ff_chunks = 0
 
     # --------------------------------------------------------------- common
     def _feedback(self, chunk: rdlb.Chunk, compute_time: float,
@@ -229,6 +243,14 @@ class Engine:
                     end = min(end, w.last_done)
                 idle[i] = max(0.0, end - w.busy)
         q = self.queue
+        # The array-native queue owns the full log (seq order by
+        # construction, even under threaded racing — rows are written
+        # under the queue lock).  The reference oracle keeps no log, so
+        # fall back to the engine's append list, normalized to seq order
+        # (threaded appends may race).
+        log_fn = getattr(q, "chunk_log", None)
+        log = (log_fn() if log_fn is not None
+               else sorted(self.assignment_log, key=lambda c: c.seq))
         return EngineStats(
             t_virtual=t_par, hung=hung, n_tasks=q.N,
             n_finished=q.n_finished, n_assignments=q.n_assignments,
@@ -236,15 +258,12 @@ class Engine:
             by_worker=dict(self.by_worker), worker_busy=busy,
             worker_idle=idle,
             survivors=[w.wid for w in self.workers if w.alive],
-            # seq IS the queue's transaction order; in threaded mode the
-            # request -> log-append window lets racing workers append
-            # out of order, so normalize here (no-op for virtual mode)
-            assignment_log=sorted(self.assignment_log,
-                                  key=lambda c: c.seq),
+            assignment_log=log,
             adaptive_decisions=(list(getattr(self.adaptive, "decisions",
                                              ()))
                                 if self.adaptive is not None else []),
-            t_wall=t_wall)
+            t_wall=t_wall,
+            fast_forwarded=self._ff_chunks)
 
     # ---------------------------------------------------- virtual-time mode
     def run(self) -> EngineStats:
@@ -262,9 +281,24 @@ class Engine:
         inflight = 0     # COMPLETE/REP_ARRIVE events guaranteed to arrive
         counter = itertools.count()          # heap tie-break
 
-        # (time, tiebreak, kind, wid, chunk, payload)
-        heap: list = [(0.0, next(counter), REQUEST, w.wid, None, None)
-                      for w in self.workers]
+        # Vectorized fast-forward (repro.core.fastpath): in the checked
+        # homogeneous fixed-chunk regime, whole rounds are processed as
+        # array recurrences and the scalar loop resumes from the
+        # in-flight COMPLETE events it would have reached event-by-event.
+        ff = (fastpath.fast_forward(self) if self.adaptive is None
+              else None)
+        if ff is not None:
+            self._ff_chunks = ff.n_chunks
+            master_free = ff.master_free
+            heap = [(float(ff.complete_times[i]), next(counter), COMPLETE,
+                     self.workers[i].wid,
+                     queue.chunk_at(int(ff.inflight_seqs[i])), None)
+                    for i in range(len(self.workers))]
+            inflight = len(heap)
+        else:
+            # (time, tiebreak, kind, wid, chunk, payload)
+            heap = [(0.0, next(counter), REQUEST, w.wid, None, None)
+                    for w in self.workers]
         heapq.heapify(heap)
 
         def assign(wid: int, t_master: float) -> bool:
@@ -288,7 +322,8 @@ class Engine:
                 # else: non-robust + all scheduled: worker blocks forever
                 # (paper Fig. 1b)
                 return False
-            self.assignment_log.append(c)
+            if self._keep_append_log:
+                self.assignment_log.append(c)
             if w.fails_by_count():
                 w.alive = False               # dies holding the chunk
                 return True
@@ -336,8 +371,12 @@ class Engine:
                 start = max(t, master_free)
                 master_free = start + h
                 inflight -= 1
-                newly = queue.report_tasks(chunk)
-                self.backend.commit(chunk, wid, payload, newly)
+                if self._trivial_commit:
+                    # no-op commit: skip materializing the id list
+                    newly = queue.report_count(chunk)
+                else:
+                    newly = queue.report_tasks(chunk)
+                    self.backend.commit(chunk, wid, payload, newly)
                 compute = self.backend.cost(chunk, chunk.pe)
                 compute /= workers[chunk.pe].speed
                 self._feedback(chunk, compute, 2 * w.msg_latency + h)
@@ -437,8 +476,9 @@ class Engine:
                     continue
                 stall_start = None
                 fruitless = 0
-                with self._commit_lock:
-                    self.assignment_log.append(chunk)
+                if self._keep_append_log:
+                    with self._commit_lock:
+                        self.assignment_log.append(chunk)
                 if w.fails_by_count():
                     w.alive = False   # dies holding the chunk
                     return

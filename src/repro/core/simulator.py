@@ -60,13 +60,20 @@ class SimResult:
 
 class SimBackend(engine.WorkerBackend):
     """Timing-only backend: execution is a no-op; cost is the chunk's
-    nominal task time (prefix sums over ``task_times``)."""
+    nominal task time (prefix sums over ``task_times``).
+
+    ``ctime`` (the prefix-sum array, public) is the vectorized cost
+    interface: the engine's fast-forward (repro.core.fastpath) reads
+    chunk costs for whole rounds straight from it instead of calling
+    ``cost`` per chunk.
+    """
 
     def __init__(self, task_times: np.ndarray) -> None:
-        self._ctime = np.cumsum(np.concatenate([[0.0], task_times]))
+        self.ctime = np.cumsum(np.concatenate([[0.0], task_times]))
+        self._ctime = self.ctime               # back-compat alias
 
     def cost(self, chunk: rdlb.Chunk, wid: int) -> float:
-        return float(self._ctime[chunk.stop] - self._ctime[chunk.start])
+        return float(self.ctime[chunk.stop] - self.ctime[chunk.start])
 
 
 def workers_from_scenario(scenario: faults.Scenario

@@ -72,7 +72,7 @@ class SwapAt:
                                       len(engine.workers))
             tech.adopt_stats(q.technique.stats)
             q.swap_technique(tech, max_duplicates=self.max_duplicates)
-            self.swapped_at = len(engine.assignment_log)
+            self.swapped_at = engine.queue.n_assignments
 
 
 class CountingBackend(engine.WorkerBackend):
@@ -116,8 +116,10 @@ def test_snapshot_capture_midrun():
     assert 0 < snap.n_finished < N_SMALL
     assert snap.n_finished + snap.n_remaining == N_SMALL
     assert set(snap.unscheduled).isdisjoint(snap.scheduled_unfinished)
-    assert snap.remaining == sorted(snap.unscheduled
-                                    + snap.scheduled_unfinished)
+    assert np.array_equal(
+        snap.remaining,
+        np.sort(np.concatenate([snap.unscheduled,
+                                snap.scheduled_unfinished])))
     assert snap.technique == "FAC"
     assert snap.n_alive == P_SMALL          # no fail-stops in this mix
     assert any(w.observed_rate > 0 for w in snap.workers)

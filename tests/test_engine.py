@@ -84,14 +84,14 @@ def test_duplicate_slot_frees_on_report():
     c1 = q.request(0)                         # PE 0 holds both tasks
     dup = q.request(1)
     assert dup.duplicate and dup.origin_seq == c0.seq
-    assert q._dup_count[c0.seq] == 1
+    assert q._c_dups[c0.seq] == 1
     q.report(dup)                             # duplicate completes
-    assert q._dup_count[c0.seq] == 0          # slot freed under origin seq
+    assert q._c_dups[c0.seq] == 0             # slot freed under origin seq
     q.report(c0)                              # late original: wasted
-    assert q._dup_count[c0.seq] == 0          # no double-free / underflow
+    assert q._c_dups[c0.seq] == 0             # no double-free / underflow
     q.report(c1)
     assert q.done
-    assert all(v >= 0 for v in q._dup_count.values())
+    assert (q._c_dups[:q._seq] >= 0).all()
 
 
 def test_late_duplicate_report_decrements_origin():
@@ -101,11 +101,11 @@ def test_late_duplicate_report_decrements_origin():
                          max_duplicates=2)
     c0 = q.request(0)
     d0 = q.request(1)
-    assert q._dup_count[c0.seq] == 1
+    assert q._c_dups[c0.seq] == 1
     q.report(c0)                              # original first
     q.report(d0)                              # duplicate wasted
     assert q.wasted_tasks == 1
-    assert q._dup_count[c0.seq] == 0
+    assert q._c_dups[c0.seq] == 0
 
 
 # ------------------------------------------------- schedule-invariant step
