@@ -14,10 +14,16 @@ million tasks.  This module measures, on the array core:
      fail-stop vs `repro.core.theory.rdlb_overhead`: decreasing in P
      (sanity-asserted at small scale in tests/test_fastcore.py);
   4. **sweep cost** — one full adaptive portfolio sweep at P=1024,
-     N=131072 (acceptance: < 2 s in the in-loop configuration).
+     N=131072 (acceptance: < 2 s in the in-loop configuration);
+  5. **device sweep** — ONE jit/vmap `repro.core.devicesim` call
+     simulating >=1000 (candidate × draw) runs at P=1024 vs the
+     equivalent Python loop of fast-forward simulations (acceptance:
+     >=10× warm, with device-vs-scalar t_par parity asserted).
 
 Writes fig_scale.csv + machine-readable BENCH_scale.json to
-artifacts/bench/.
+artifacts/bench/ (a committed reference copy lives in
+benchmarks/baselines/BENCH_scale.json — CI refreshes it from the dry
+run so the bench trajectory is seeded for successor PRs).
 
     PYTHONPATH=src python benchmarks/fig_scale.py            # full
     PYTHONPATH=src python benchmarks/fig_scale.py --dry-run  # CI smoke
@@ -133,22 +139,77 @@ def sweep_cost(P=1024, N=131072, seed=0):
                 in_loop_s=round(in_loop, 3), full_n_s=round(full_n, 3))
 
 
+# ------------------------------------------------------- device batch sweep
+def device_sweep_point(P=1024, N=1 << 17, B=1024, t=0.01, h=1e-6,
+                       loop_sample=3):
+    """One jit/vmap ``core.devicesim`` call simulating B (candidate x
+    draw) homogeneous-regime runs vs the equivalent Python loop of
+    fast-forward simulations.
+
+    The batch cycles the four fixed-chunk techniques (the device
+    portfolio) over B elements; the loop baseline times ``loop_sample``
+    ``api.simulate`` calls per technique and extrapolates to B (running
+    the full loop would take minutes — that is the point).  Parity of
+    every technique's t_par against the scalar engine is asserted here,
+    on top of the dedicated suite in tests/test_devicesim.py."""
+    from repro.core import devicesim
+    techniques = ("SS", "STATIC", "mFSC", "FSC")
+    tt = np.full(N, t)
+    lows, scalar_tp = [], []
+    loop_per_sim = 0.0
+    for tech in techniques:
+        spec = _spec(tech, P, h=h)
+        lo, why = devicesim.lower_run(spec, tt)
+        assert lo is not None, f"{tech}: {why}"
+        lows.append(lo)
+        best = np.inf
+        for _ in range(loop_sample):
+            r, wall = _run(tech, P, N, t, h=h)
+            best = min(best, wall)
+        loop_per_sim += best / len(techniques)
+        scalar_tp.append(r.t_par)
+    tech_of = np.arange(B, dtype=np.int32) % len(techniques)
+    t0 = time.perf_counter()
+    res = devicesim.simulate_many(lows, tech_of=tech_of)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = devicesim.simulate_many(lows, tech_of=tech_of)
+    warm_s = time.perf_counter() - t0
+    assert res.valid.all(), "device path declined in its home regime"
+    for u, tp in enumerate(scalar_tp):
+        dev = res.t_par[tech_of == u]
+        assert np.allclose(dev, tp, rtol=1e-12, atol=1e-9), \
+            (techniques[u], dev[0], tp)
+    loop_est_s = loop_per_sim * B
+    return dict(P=P, N=N, batch=B, techniques=len(techniques),
+                cold_s=round(cold_s, 3), warm_s=round(warm_s, 3),
+                loop_per_sim_s=round(loop_per_sim, 4),
+                loop_est_s=round(loop_est_s, 1),
+                speedup_warm=round(loop_est_s / warm_s, 1),
+                speedup_cold=round(loop_est_s / cold_s, 1))
+
+
 # ------------------------------------------------------------------ driver
 def run(quick: bool = True):
     if quick:
         points = scale_points(Ps=(64, 256, 1024), N=1 << 18)
         speed = speedup_point(P=256, N=32768)
         sweep = sweep_cost(P=256, N=32768)
+        device = device_sweep_point(P=256, N=1 << 15, B=512)
     else:
         points = scale_points()
         speed = speedup_point()
         sweep = sweep_cost()
+        device = device_sweep_point()
         assert speed["speedup"] >= 50.0, speed
         assert sweep["in_loop_s"] < 2.0, sweep
+        # the tentpole acceptance: >=1000 batched runs at P=1024, >=10x
+        # the equivalent Python loop
+        assert device["speedup_warm"] >= 10.0, device
     overhead = overhead_points() if not quick else overhead_points(
         Ps=(16, 64), N=1 << 14)
     out = dict(scale_points=points, speedup=speed, overhead=overhead,
-               sweep=sweep)
+               sweep=sweep, device_sweep=device)
     common.write_csv("fig_scale",
                      ["P", "N", "t_par", "wall_s", "assignments",
                       "events_per_s", "efficiency"],
@@ -180,6 +241,10 @@ def main(quick: bool = True):
     lines.append(f"fig_scale,sweep,P={w['P']},N={w['N']},"
                  f"in_loop_s={w['in_loop_s']},full_n_s={w['full_n_s']},"
                  f"under_2s={w['in_loop_s'] < 2.0}")
+    d = out["device_sweep"]
+    lines.append(f"fig_scale,device,P={d['P']},N={d['N']},B={d['batch']},"
+                 f"warm_s={d['warm_s']},loop_est_s={d['loop_est_s']},"
+                 f"x={d['speedup_warm']}")
     return lines
 
 
@@ -189,8 +254,9 @@ def dry_run():
     speed = speedup_point(P=32, N=8192)
     overhead = overhead_points(Ps=(8, 16), N=1 << 12)
     sweep = sweep_cost(P=64, N=8192)
+    device = device_sweep_point(P=64, N=1 << 13, B=256, loop_sample=1)
     out = dict(scale_points=points, speedup=speed, overhead=overhead,
-               sweep=sweep, dry_run=True)
+               sweep=sweep, device_sweep=device, dry_run=True)
     common.ARTIFACTS.mkdir(parents=True, exist_ok=True)
     with open(common.ARTIFACTS / "BENCH_scale.json", "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
@@ -198,6 +264,7 @@ def dry_run():
     assert overhead[0]["overhead"] > overhead[-1]["overhead"] - 0.05
     print(f"fig_scale,dry,speedup_x,{speed['speedup']}")
     print(f"fig_scale,dry,sweep_s,{sweep['in_loop_s']}")
+    print(f"fig_scale,dry,device_x,{device['speedup_warm']}")
     print("fig_scale,dry,OK,1")
 
 

@@ -42,9 +42,26 @@ assert not r2.hang and r2.n_finished == 16384, (r2.t_par, r2.n_finished)
 assert dt2 < 10.0, f"scalar-loop regression: {dt2:.2f}s for P=512/N=16384"
 print(f"perf-smoke,scalar,wall={dt2:.3f}s,assignments={r2.n_assignments}")
 PY
+# device-sweep smoke + perf gate: one jit/vmap core.devicesim call over a
+# >=256-element (candidate x draw) batch must (a) agree with the scalar
+# engine and (b) beat the equivalent Python loop by >=5x at P=256.  Hard
+# `timeout` so a compile hang cannot wedge CI (full 10x gate at P=1024
+# runs in fig_scale --paper).
+timeout 240 python - <<'PY'
+from benchmarks.fig_scale import device_sweep_point
+d = device_sweep_point(P=256, N=1 << 15, B=512, loop_sample=2)
+assert d["batch"] >= 256, d
+assert d["speedup_warm"] >= 5.0, f"device-sweep perf gate: {d}"
+print(f"device-smoke,ok,B={d['batch']},warm_s={d['warm_s']},"
+      f"x={d['speedup_warm']}")
+PY
 # perf trajectory: machine-readable BENCH_*.json every CI run (small:
-# fig_scale dry-run writes BENCH_scale.json, theory is seconds-cheap)
+# fig_scale dry-run writes BENCH_scale.json, theory is seconds-cheap),
+# and the dry-run output is committed as the benchmark baseline so
+# successor PRs inherit a seeded trajectory
 timeout 120 python benchmarks/fig_scale.py --dry-run
+mkdir -p benchmarks/baselines
+cp artifacts/bench/BENCH_scale.json benchmarks/baselines/BENCH_scale.json
 timeout 300 python -m benchmarks.run --only theory --emit-json > /dev/null
 # spec-layer smokes: the facade, the CLI, and the examples cannot rot
 tmp_spec=$(mktemp /tmp/rdlb_spec_XXXXXX.json)

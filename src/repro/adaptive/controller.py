@@ -59,6 +59,9 @@ class AdaptiveConfig:
     max_sim_tasks:  forecast coarsening cap (None = exact remainder).
     prewarm:        seed candidate techniques with learned PE stats.
     forecast_h:     master overhead for forecasts (None = engine's h).
+    device_sweep:   batch the portfolio forecast into one jit/vmap call
+        on core.devicesim (candidates outside the homogeneous
+        fixed-chunk regime fall back to the scalar engine).
     """
     portfolio: tuple = DEFAULT_PORTFOLIO
     decision_every_chunks: Optional[int] = 64
@@ -71,6 +74,7 @@ class AdaptiveConfig:
     prewarm: bool = True
     forecast_h: Optional[float] = None
     seed: int = 0
+    device_sweep: bool = False
 
 
 @dataclasses.dataclass
@@ -170,7 +174,7 @@ class AdaptiveController:
         h = cfg.forecast_h if cfg.forecast_h is not None else engine.h
         preds = sweep(snap, self._tt, portfolio, h=h, seed=cfg.seed,
                       max_sim_tasks=cfg.max_sim_tasks,
-                      prewarm=cfg.prewarm)
+                      prewarm=cfg.prewarm, device=cfg.device_sweep)
         by_cand = dict(preds)
         best, best_t = preds[0]
         inc_t = by_cand[incumbent]

@@ -89,6 +89,38 @@ def coarsen_times(times: np.ndarray,
     return np.add.reduceat(times, starts)
 
 
+def _prepare(snap: EngineSnapshot, task_times: Sequence[float], *,
+             h: float = 1e-4, seed: int = 0,
+             max_sim_tasks: Optional[int] = None, horizon: float = 1e7):
+    """Snapshot-derived inputs shared by EVERY candidate forecast —
+    remainder times, the coarsened simulation workload, the incumbent
+    base spec and the survivors' learned stats — computed ONCE per sweep
+    instead of once per candidate."""
+    rem = remaining_times(snap, task_times)
+    times = coarsen_times(rem, max_sim_tasks)
+    base = base_spec_from_snapshot(snap, h=h, seed=seed, horizon=horizon)
+    alive_stats = [w.stats if w.stats is not None else dls.PEStats()
+                   for w in snap.workers if w.alive]
+    scale = len(rem) / len(times) if len(times) else 1.0
+    return rem, times, base, alive_stats, scale
+
+
+def _build_candidate(times, base, alive_stats, scale, cand, prewarm):
+    """Candidate delta -> (remainder spec, prewarmed technique)."""
+    spec = cand.apply(base)
+    tech = api.make_scheduler(spec, len(times))
+    if prewarm and alive_stats:
+        tech.adopt_stats(alive_stats, time_scale=scale)
+    return spec, tech
+
+
+def _forecast_one(times, base, alive_stats, scale, cand, prewarm) -> float:
+    spec, tech = _build_candidate(times, base, alive_stats, scale, cand,
+                                  prewarm)
+    res = api.simulate(spec, times, technique=tech)
+    return float(res.t_par)
+
+
 def forecast_candidate(snap: EngineSnapshot,
                        task_times: Sequence[float],
                        cand: Candidate, *,
@@ -104,30 +136,71 @@ def forecast_candidate(snap: EngineSnapshot,
     from what the run has already observed instead of cold.  Returns
     ``inf`` if the forecast itself hangs.
     """
-    rem = remaining_times(snap, task_times)
+    rem, times, base, alive_stats, scale = _prepare(
+        snap, task_times, h=h, seed=seed, max_sim_tasks=max_sim_tasks,
+        horizon=horizon)
     if len(rem) == 0:
         return 0.0
-    times = coarsen_times(rem, max_sim_tasks)
-    spec = cand.apply(base_spec_from_snapshot(snap, h=h, seed=seed,
-                                              horizon=horizon))
-    tech = api.make_scheduler(spec, len(times))
-    if prewarm:
-        alive_stats = [w.stats if w.stats is not None else dls.PEStats()
-                       for w in snap.workers if w.alive]
-        if alive_stats:
-            tech.adopt_stats(alive_stats,
-                             time_scale=len(rem) / len(times))
-    res = api.simulate(spec, times, technique=tech)
-    return float(res.t_par)
+    return _forecast_one(times, base, alive_stats, scale, cand, prewarm)
+
+
+def _device_sweep(portfolio, times, base, alive_stats, scale, prewarm):
+    """Batch every lowerable candidate into ONE device call.
+
+    Returns ``(preds, scalar_rest)``: candidates outside the device
+    regime (adaptive chunking, finite dup caps, heterogeneous overrides,
+    budget-exhausted elements, ...) land in ``scalar_rest`` and are
+    forecast by the exact engine — the device path degrades to the
+    oracle, never silently mis-simulates.
+    """
+    from repro.core import devicesim
+    if not devicesim.device_available():
+        return [], list(portfolio)
+    lows, cands, rest = [], [], []
+    for cand in portfolio:
+        spec, tech = _build_candidate(times, base, alive_stats, scale,
+                                      cand, prewarm)
+        lo, _ = devicesim.lower_run(spec, times, technique=tech)
+        if lo is None or (lows and lo.P != lows[0].P):
+            rest.append(cand)
+        else:
+            lows.append(lo)
+            cands.append(cand)
+    if not lows:
+        return [], rest
+    res = devicesim.simulate_many(lows)
+    preds = []
+    for i, cand in enumerate(cands):
+        if res.valid[i]:
+            preds.append((cand, float(res.t_par[i])))
+        else:
+            rest.append(cand)
+    return preds, rest
 
 
 def sweep(snap: EngineSnapshot, task_times: Sequence[float],
-          portfolio: Sequence[Candidate] = DEFAULT_PORTFOLIO,
+          portfolio: Sequence[Candidate] = DEFAULT_PORTFOLIO, *,
+          prewarm: bool = True, device: bool = False,
           **kw) -> list[tuple[Candidate, float]]:
     """Forecast every candidate; returns [(candidate, predicted T_par)]
-    sorted best-first (hung forecasts rank last at inf)."""
-    preds = [(c, forecast_candidate(snap, task_times, c, **kw))
-             for c in portfolio]
+    sorted best-first (hung forecasts rank last at inf).
+
+    ``device=True`` batches all candidates inside the homogeneous
+    fixed-chunk regime (see :data:`repro.api.DEVICE_PORTFOLIO`) into one
+    jit/vmap call on ``core.devicesim``; the rest — and anything the
+    device path declines — fall back to the scalar engine, candidate by
+    candidate, so the ranking is unchanged up to float64 round-off."""
+    rem, times, base, alive_stats, scale = _prepare(snap, task_times, **kw)
+    if len(rem) == 0:
+        preds = [(c, 0.0) for c in portfolio]
+    else:
+        preds, rest = ([], list(portfolio))
+        if device:
+            preds, rest = _device_sweep(portfolio, times, base,
+                                        alive_stats, scale, prewarm)
+        preds += [(c, _forecast_one(times, base, alive_stats, scale, c,
+                                    prewarm))
+                  for c in rest]
     preds.sort(key=lambda p: (p[1], p[0].label))
     return preds
 

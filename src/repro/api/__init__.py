@@ -21,7 +21,8 @@ from repro.api.facade import (  # noqa: F401
     train_spec, warn_legacy,
 )
 from repro.api.spec import (  # noqa: F401
-    DEFAULT_PORTFOLIO, SPEC_VERSION, AdaptiveSpec, Candidate, ClusterSpec,
+    DEFAULT_PORTFOLIO, DEVICE_PORTFOLIO, SPEC_VERSION, AdaptiveSpec,
+    Candidate, ClusterSpec,
     ExecutionSpec, RobustnessSpec, RunSpec, SchedulingSpec, WorkerSpec,
     spec_override,
 )

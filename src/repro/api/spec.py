@@ -41,7 +41,8 @@ SPEC_VERSION = 1
 __all__ = [
     "SPEC_VERSION", "VALID_MODES", "SchedulingSpec", "RobustnessSpec",
     "WorkerSpec", "ClusterSpec", "ExecutionSpec", "AdaptiveSpec",
-    "Candidate", "DEFAULT_PORTFOLIO", "RunSpec", "spec_override",
+    "Candidate", "DEFAULT_PORTFOLIO", "DEVICE_PORTFOLIO", "RunSpec",
+    "spec_override",
 ]
 
 
@@ -440,6 +441,18 @@ DEFAULT_PORTFOLIO: tuple = (
     Candidate("AWF-B", barrier_max_duplicates=None),
 )
 
+# Fixed-chunk candidates that lower onto the batched device simulator
+# (core.devicesim): with ``AdaptiveSpec(device_sweep=True)`` the whole
+# portfolio forecasts in ONE jit/vmap call.  Any candidate outside the
+# device regime simply falls back to the scalar engine, so mixing these
+# with DEFAULT_PORTFOLIO entries is safe — just slower.
+DEVICE_PORTFOLIO: tuple = (
+    Candidate("SS"),
+    Candidate("STATIC"),
+    Candidate("mFSC"),
+    Candidate("FSC"),
+)
+
 
 # ----------------------------------------------------------------- adaptive
 @dataclasses.dataclass(frozen=True)
@@ -462,6 +475,7 @@ class AdaptiveSpec:
     prewarm: bool = True
     forecast_h: Optional[float] = None
     seed: int = 0
+    device_sweep: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "portfolio", tuple(
@@ -482,7 +496,8 @@ class AdaptiveSpec:
             max_sim_tasks=self.max_sim_tasks,
             prewarm=self.prewarm,
             forecast_h=self.forecast_h,
-            seed=self.seed)
+            seed=self.seed,
+            device_sweep=self.device_sweep)
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "AdaptiveSpec":
