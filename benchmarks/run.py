@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -46,6 +47,39 @@ def _records(lines: list[str]) -> list[dict]:
     return out
 
 
+def provenance() -> dict:
+    """Attribution stamp for every BENCH_*.json: which commit, when,
+    where, on what stack.  Every field is best-effort — a bench emitted
+    outside a git checkout or without jax still writes valid JSON."""
+    import datetime
+    import platform
+    import subprocess
+    prov: dict = {
+        "date": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        prov["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        prov["git_sha"] = None
+    try:
+        import numpy
+        prov["numpy"] = numpy.__version__
+    except ImportError:
+        pass
+    try:
+        import jax
+        prov["jax"] = jax.__version__
+    except ImportError:
+        prov["jax"] = None
+    return prov
+
+
 def emit_json(name: str, lines: list[str], elapsed_s: float,
               error: str = "") -> str:
     from benchmarks import common
@@ -54,7 +88,7 @@ def emit_json(name: str, lines: list[str], elapsed_s: float,
     with open(path, "w") as f:
         json.dump(dict(module=name, elapsed_s=round(elapsed_s, 2),
                        lines=lines, records=_records(lines),
-                       error=error),
+                       error=error, provenance=provenance()),
                   f, indent=2, sort_keys=True)
     return str(path)
 

@@ -19,6 +19,9 @@
 8. Monte-Carlo resilience: the device-resident simulator batches
    thousands of failure draws into ONE jit/vmap call — rho_res with a
    95% confidence interval from a single RunSpec.
+9. Flight recorder: trace the process-mode chaos run event by event
+   and export Chrome/Perfetto JSON — the re-issue filling the killed
+   worker's gap, visible on a timeline.
 """
 
 import sys
@@ -205,4 +208,28 @@ if devicesim.device_available():
               f"+- {ci8:.3f} (95% CI, {d8} draws)")
 else:                                   # pragma: no cover - jax baked in
     print("   (jax unavailable -- skipped)")
+
+print("=== 9. Flight recorder: trace a chaos run, open in Perfetto ===")
+# Aggregates say WHAT happened; the trace shows WHEN.  Turn on the
+# flight recorder (ExecutionSpec.trace) for the section-6 one-kill
+# scenario in process mode — a REAL SIGKILL — and export the run as
+# Chrome-trace JSON.  Drag the file onto https://ui.perfetto.dev: one
+# lane per worker, the victim's lane ends at the kill instant, the
+# rDLB re-issue shows up orange on a survivor's lane filling the gap.
+from repro.core import trace as trc
+spec9 = spec6.override("execution.mode", "process").override(
+    "execution.trace", True)
+r9 = api.simulate(spec9, tt6)
+assert not r9.hang and r9.n_finished == len(tt6)
+c9 = r9.trace.counters()                # stream == queue accounting
+assert c9["n_finished"] == r9.n_finished
+assert c9["n_duplicates"] == r9.n_duplicates
+out9 = Path("artifacts") / "quickstart_trace.json"
+out9.parent.mkdir(exist_ok=True)
+trc.save_chrome(r9.trace, out9)
+lat9 = r9.trace.dispatch_latency()
+print(f"   {len(r9.trace)} events recorded; dispatch latency "
+      f"p50={lat9['p50'] * 1e6:.0f}us p99={lat9['p99'] * 1e6:.0f}us")
+print(f"   wrote {out9} -- open it at https://ui.perfetto.dev")
+print(f"   (or: python -m repro trace summarize {out9})")
 print("OK")

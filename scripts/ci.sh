@@ -95,4 +95,68 @@ r = api.simulate(spec, tt)
 assert not r.hang and r.n_finished == 60, (r.t_par, r.n_finished)
 print(f"cluster-smoke,ok,t_wall={r.t_wall:.3f}s,dups={r.n_duplicates}")
 PY
+# flight-recorder smokes: (a) the CLI --trace path exports valid
+# Chrome-trace JSON whose reconstructed counters match the run; (b) the
+# tracing-off hot path stays free — the traced P=512/N=65536 perf-smoke
+# must land within 1.10x of the untraced run (best-of-3, additive
+# epsilon absorbs scheduler jitter on a loaded CI host)
+tmp_trace=$(mktemp /tmp/rdlb_trace_XXXXXX.json)
+tmp_spec=$(mktemp /tmp/rdlb_spec_XXXXXX.json)
+python - "$tmp_spec" <<'PY'
+import json
+import sys
+from repro import api
+doc = {
+    "workload": {"kind": "uniform", "n": 256, "t": 0.005},
+    "spec": api.RunSpec(
+        scheduling=api.SchedulingSpec(technique="FAC"),
+        cluster=api.ClusterSpec(n_workers=4, workers=(
+            api.WorkerSpec(),) * 3 + (api.WorkerSpec(fail_time=0.1),)),
+    ).to_dict(),
+}
+with open(sys.argv[1], "w") as f:
+    json.dump(doc, f)
+PY
+python -m repro run --spec "$tmp_spec" --trace "$tmp_trace" > /dev/null
+python - "$tmp_trace" <<'PY'
+import json
+import sys
+from repro.core import trace as trc
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+assert doc["traceEvents"], "empty Chrome trace"
+assert all("ph" in e and "pid" in e for e in doc["traceEvents"])
+c = trc.load_trace(sys.argv[1]).counters()
+assert c["n_finished"] == 256, c
+print(f"trace-smoke,ok,events={len(doc['traceEvents'])},"
+      f"dups={c['n_duplicates']}")
+PY
+python -m repro trace summarize "$tmp_trace" > /dev/null
+rm -f "$tmp_trace" "$tmp_spec"
+timeout 120 python - <<'PY'
+import time
+import numpy as np
+from repro import api
+from repro.core import faults
+tt = np.full(65536, 0.01)
+spec = api.RunSpec(
+    scheduling=api.SchedulingSpec(technique="SS"),
+    cluster=api.ClusterSpec.from_scenario(faults.baseline(512)),
+    execution=api.ExecutionSpec(h=1e-4))
+
+def best_of(s, n=3):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        r = api.simulate(s, tt)
+        best = min(best, time.perf_counter() - t0)
+        assert not r.hang and r.n_finished == 65536
+    return best
+
+t_off = best_of(spec)
+t_on = best_of(spec.override("execution.trace", True))
+assert t_on <= t_off * 1.10 + 0.05, (
+    f"trace overhead gate: traced {t_on:.3f}s vs untraced {t_off:.3f}s")
+print(f"trace-overhead,ok,off={t_off:.3f}s,on={t_on:.3f}s")
+PY
 python -m pytest -x -q "$@"

@@ -88,6 +88,15 @@ class DecisionRecord:
     chosen: str                 # label after (== incumbent if no swap)
     swapped: bool
 
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        # forecast T_par may be inf (a predicted hang) — keep it JSON-safe
+        d["predictions"] = {k: (None if v != v or v in (float("inf"),
+                                                       float("-inf"))
+                                else float(v))
+                            for k, v in self.predictions.items()}
+        return d
+
 
 class AdaptiveController:
     """Simulation-in-the-loop technique selection with mid-run hot-swap.

@@ -30,7 +30,17 @@ resilience ρ_res is computed per scenario against ``baseline_scenario``
 Usage::
 
     python -m repro run --spec runs/fig4_fail1.json [--dry-run] [--csv f]
+    python -m repro run --spec f.json --trace out.json   # flight recorder
+    python -m repro run --spec f.json --emit-json rec.json
     python -m repro show --spec runs/fig4_fail1.json
+    python -m repro trace summarize out.json
+    python -m repro trace diff a.json b.json
+
+``--trace`` forces the flight recorder on (``execution.trace``) and
+exports each run as Chrome-trace-event JSON — open it at
+https://ui.perfetto.dev.  ``--emit-json`` dumps the full run record(s)
+(SimResult.to_dict, trace included when recorded).  ``trace summarize``
+/ ``trace diff`` re-derive metrics from exported files.
 """
 
 from __future__ import annotations
@@ -100,8 +110,21 @@ def load_run_file(path: str):
             doc.get("baseline_scenario", "baseline"))
 
 
+def _suffixed(path: str, name: str, many: bool) -> str:
+    """out.json -> out.<name>.json when a sweep has several entries."""
+    if not many:
+        return path
+    stem, dot, ext = path.rpartition(".")
+    safe = name.replace("/", "_")
+    return f"{stem}.{safe}{dot}{ext}" if dot else f"{path}.{safe}"
+
+
 def cmd_run(args) -> int:
     tt, entries, metric, baseline = load_run_file(args.spec)
+    tracing = bool(getattr(args, "trace", ""))
+    if tracing:
+        entries = [(n, s.override("execution.trace", True))
+                   for n, s in entries]
     if args.dry_run:
         for name, spec in entries:
             facade.build(spec, facade.engine.WorkerBackend(),
@@ -112,6 +135,7 @@ def cmd_run(args) -> int:
         print(f"dryrun,total,{len(entries)} run(s) validated")
         return 0
     rows = []
+    many = len(entries) > 1
     for name, spec in entries:
         r = facade.simulate(spec, tt)
         rows.append((name, r))
@@ -119,6 +143,17 @@ def cmd_run(args) -> int:
               f"{spec.cluster.name or spec.name or 'cluster'},"
               f"{int(spec.robustness.rdlb_enabled)},{r.t_par},"
               f"{r.n_duplicates},{r.wasted_tasks},{int(r.hang)}")
+        if tracing and r.trace is not None:
+            from repro.core import trace as trc
+            out = _suffixed(args.trace, name, many)
+            trc.save_chrome(r.trace, out)
+            print(f"trace,{name},{out},{len(r.trace)} events")
+        if getattr(args, "emit_json", ""):
+            out = _suffixed(args.emit_json, name, many)
+            with open(out, "w") as f:
+                json.dump(r.to_dict(), f)
+                f.write("\n")
+            print(f"record,{name},{out}")
     if metric == "resilience":
         for line in resilience_lines(rows, baseline):
             print(line)
@@ -160,6 +195,22 @@ def resilience_lines(rows, baseline_scenario: str) -> list:
     return out
 
 
+def cmd_trace(args) -> int:
+    """``trace summarize <file>`` / ``trace diff <a> <b>`` on exported
+    trace files (Chrome JSON with the embedded "repro" record, or bare
+    Trace.to_dict dumps)."""
+    from repro.core import trace as trc
+    if args.action == "summarize":
+        print(trc.summarize(trc.load_trace(args.files[0])))
+        return 0
+    if len(args.files) < 2:
+        print("trace diff needs two files", file=sys.stderr)
+        return 2
+    print(trc.diff(trc.load_trace(args.files[0]),
+                   trc.load_trace(args.files[1])))
+    return 0
+
+
 def cmd_show(args) -> int:
     tt, entries, metric, baseline = load_run_file(args.spec)
     print(f"workload: {len(tt)} tasks, total {tt.sum():.4g}s nominal")
@@ -181,10 +232,22 @@ def main(argv: Optional[list] = None) -> int:
     p_run.add_argument("--dry-run", action="store_true",
                        help="validate and build without running")
     p_run.add_argument("--csv", default="", help="also write rows to CSV")
+    p_run.add_argument("--trace", default="",
+                       help="record the run and export Chrome/Perfetto "
+                            "trace JSON to this path (sweeps get a "
+                            "per-entry suffix)")
+    p_run.add_argument("--emit-json", default="",
+                       help="dump the full run record(s) as JSON "
+                            "(SimResult.to_dict, trace included)")
     p_run.set_defaults(fn=cmd_run)
     p_show = sub.add_parser("show", help="pretty-print a spec file")
     p_show.add_argument("--spec", required=True)
     p_show.set_defaults(fn=cmd_show)
+    p_tr = sub.add_parser("trace",
+                          help="inspect exported trace files")
+    p_tr.add_argument("action", choices=("summarize", "diff"))
+    p_tr.add_argument("files", nargs="+", help="trace JSON file(s)")
+    p_tr.set_defaults(fn=cmd_trace)
     args = ap.parse_args(argv)
     return args.fn(args)
 

@@ -124,6 +124,10 @@ def build(spec: RunSpec, backend: engine.WorkerBackend, *,
         from repro.adaptive import AdaptiveController  # lazy: no cycle
         policy = AdaptiveController(task_times=task_times,
                                     config=spec.adaptive.to_config())
+    recorder = None
+    if e.trace:
+        from repro.core import trace as _trc            # lazy import
+        recorder = _trc.TraceRecorder()
     if e.mode == "process":
         if policy is not None:
             raise ValueError(
@@ -132,12 +136,13 @@ def build(spec: RunSpec, backend: engine.WorkerBackend, *,
         from repro import cluster                       # lazy: no cycle
         return cluster.ClusterRun(
             queue, spec, backend, factory=factory,
-            record_feedback=spec.scheduling.feedback)
+            record_feedback=spec.scheduling.feedback,
+            trace=recorder)
     return engine.Engine(queue, spec.cluster.engine_workers(), backend,
                          h=e.h, horizon=e.horizon,
                          record_feedback=spec.scheduling.feedback,
                          max_fruitless_polls=e.max_fruitless_polls,
-                         adaptive=policy)
+                         adaptive=policy, trace=recorder)
 
 
 def run(spec: RunSpec, eng) -> engine.EngineStats:
@@ -191,4 +196,6 @@ def simulate(spec: RunSpec, task_times: Sequence[float], *,
         rdlb=spec.robustness.rdlb_enabled,
         adaptive_decisions=st.adaptive_decisions,
         t_wall=st.t_wall,
+        chaos_events=st.chaos_events,
+        trace=st.trace,
     )

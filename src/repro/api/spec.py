@@ -330,6 +330,9 @@ class ExecutionSpec:
     queue schedules group-sized chunks and rDLB re-issues them ACROSS
     groups.  ``wall_timeout`` is a process-mode hard wall-clock cap
     (None = rely on stall detection only).
+    ``trace`` turns on the flight recorder (``repro.core.trace``): the
+    run's event stream lands on ``EngineStats.trace`` /
+    ``SimResult.trace``.  Off by default — an untraced run pays nothing.
     """
     mode: str = "virtual"
     h: float = 1e-4
@@ -339,6 +342,7 @@ class ExecutionSpec:
     max_fruitless_polls: Optional[int] = None
     n_groups: int = 1
     wall_timeout: Optional[float] = None
+    trace: bool = False
 
     def __post_init__(self):
         if self.mode not in VALID_MODES:
@@ -364,7 +368,8 @@ class ExecutionSpec:
                    stall_timeout=float(d.get("stall_timeout", 5.0)),
                    max_fruitless_polls=d.get("max_fruitless_polls"),
                    n_groups=int(d.get("n_groups", 1)),
-                   wall_timeout=d.get("wall_timeout"))
+                   wall_timeout=d.get("wall_timeout"),
+                   trace=bool(d.get("trace", False)))
 
 
 # ---------------------------------------------------------------- candidate

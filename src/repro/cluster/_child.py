@@ -26,7 +26,8 @@ def main(argv=None) -> None:
     with open(d["factory_path"], "rb") as f:
         factory = pickle.load(f)
     worker_main(d["address"], d["wid"], factory,
-                d["sleep_per_task"], d["poll"])
+                d["sleep_per_task"], d["poll"],
+                trace=d.get("trace", False))
 
 
 if __name__ == "__main__":

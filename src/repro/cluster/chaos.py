@@ -48,6 +48,9 @@ class ChaosEvent:
     action: str          # "kill" | "stop" | "throttle" | "kill_by_count"
     detail: str = ""
 
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
 
 def _signal(pid: int, sig: int) -> bool:
     try:

@@ -38,6 +38,7 @@ reporting ``hung=True`` through ``EngineStats`` instead of deadlocking.
 
 from __future__ import annotations
 
+import json
 import math
 import multiprocessing
 import os
@@ -58,6 +59,7 @@ from repro.cluster.chaos import ChaosController
 from repro.cluster.worker import (FnRunner, NullRunner, SleepRunner,
                                   worker_main)
 from repro.core import engine, rdlb
+from repro.core import trace as trc
 
 # Grace period before stall detection may fire while NO assignment has
 # been made yet: spawned children may be importing JAX (seconds), which
@@ -170,10 +172,18 @@ class ClusterRun:
     def __init__(self, queue: rdlb.RobustQueue, spec,
                  backend: engine.WorkerBackend, *,
                  factory: Any = None,
-                 record_feedback: bool = True) -> None:
+                 record_feedback: bool = True,
+                 trace: Optional[trc.TraceRecorder] = None) -> None:
         self.queue = queue
         self.spec = spec
         self.backend = backend
+        # Flight recorder (core.trace).  The master records its own
+        # transactions directly; workers record their execution spans
+        # in-process and ship them over the transport (see
+        # cluster.worker) — merged here with monotonic-clock offset
+        # alignment.  None = tracing off, zero instrumentation cost.
+        self.trace = trace
+        self._t0 = 0.0
         self.factory = (factory if factory is not None
                         else factory_for_backend(backend))
         self.record_feedback = record_feedback
@@ -229,6 +239,8 @@ class ClusterRun:
     def _handle_request(self, cl: _Client, chaos: ChaosController,
                         two_level: bool) -> None:
         queue, e = self.queue, self.spec.execution
+        tr = self.trace
+        t_req = time.monotonic() if tr is not None else 0.0
         if queue.done:
             cl.clean_exit = True
             cl.conn.send(("done",))
@@ -265,11 +277,20 @@ class ClusterRun:
         with self._lock:
             self.assignment_log.append(chunk)
         cl.fruitless = 0
+        if tr is not None:
+            now = time.monotonic()
+            tr.event(trc.EV_REISSUE if chunk.duplicate else trc.EV_ASSIGN,
+                     now - self._t0, cl.wid, chunk.seq, chunk.start,
+                     chunk.size, aux=chunk.origin_seq, dt=now - t_req)
         if w is not None and w.fails_by_count():
             # count-based fail-stop: the worker receives the chunk and
             # dies holding it — enforced here because the master owns
             # the task accounting (the worker cannot count for itself
             # what the scheduler considers "executed").
+            if tr is not None:
+                tr.event(trc.EV_DEATH, time.monotonic() - self._t0,
+                         cl.wid, chunk.seq, chunk.start, chunk.size,
+                         detail="fail_after_tasks")
             w.alive = False
             chaos.kill(cl.wid, action="kill_by_count",
                        detail=f"fail_after_tasks={w.fail_after_tasks}")
@@ -283,6 +304,18 @@ class ClusterRun:
         _, wid, chunk, payload, dt, by = msg
         cl.inflight = max(0, cl.inflight - 1)
         newly = self.queue.report_tasks(chunk)
+        tr = self.trace
+        if tr is not None:
+            # two-level reports attribute executed work to the group's
+            # REAL workers through ``by``; carry it as a JSON detail so
+            # trace-side by_worker reconstruction matches the stats
+            default_by = {wid: chunk.size}
+            tr.event(trc.EV_REPORT, time.monotonic() - self._t0, wid,
+                     chunk.seq, chunk.start, chunk.size, aux=len(newly),
+                     dt=dt,
+                     detail=(None if (by or default_by) == default_by
+                             else json.dumps({str(k): int(v)
+                                              for k, v in by.items()})))
         with self._lock:
             self.backend.commit(chunk, wid, payload, newly)
             if self.record_feedback:
@@ -333,6 +366,12 @@ class ClusterRun:
                     self._handle_request(cl, chaos, two_level)
                 elif kind == "report":
                     self._handle_report(cl, msg, t0, done_evt, two_level)
+                elif kind == "trace":
+                    # worker-recorded spans, absolute monotonic stamps:
+                    # shift onto the master's run clock (single host —
+                    # CLOCK_MONOTONIC is shared, alignment is an offset)
+                    if self.trace is not None:
+                        self.trace.merge_raw(msg[2], offset=-self._t0)
                 elif kind == "error":
                     errors.append((msg[1], msg[2]))
                     if two_level:
@@ -405,19 +444,21 @@ class ClusterRun:
                             protocol=pickle.HIGHEST_PROTOCOL)
 
         def spawn_worker(address: str, wid: int):
+            tracing = self.trace is not None
             if heavy:
                 path = os.path.join(tmp, f"worker{wid}.pkl")
                 with open(path, "wb") as f:
                     pickle.dump(dict(address=address, wid=wid,
                                      factory_path=factory_path,
                                      sleep_per_task=ws[wid].sleep_per_task,
-                                     poll=e.poll), f)
+                                     poll=e.poll, trace=tracing), f)
                 return _PopenHandle(subprocess.Popen(
                     [sys.executable, "-m", "repro.cluster._child", path],
                     env=child_env))
             p = ctx.Process(target=worker_main,
                             args=(address, wid, self.factory,
-                                  ws[wid].sleep_per_task, e.poll),
+                                  ws[wid].sleep_per_task, e.poll,
+                                  tracing),
                             daemon=True)
             _start_quietly(p)
             return p
@@ -456,6 +497,9 @@ class ClusterRun:
             chaos = ChaosController(ws, worker_pids,
                                     seed=spec.scheduling.seed)
             t0 = time.monotonic()
+            self._t0 = t0          # trace clock zero; the acceptor (and
+                                   # hence every handler) starts after
+                                   # this, so no event predates it
             chaos.start(t0)
 
             # ------------------------------------------------- accept
@@ -572,6 +616,23 @@ class ClusterRun:
         for wid in chaos.killed | chaos.stopped:
             self._by_wid[wid].alive = False
         P = len(self.workers)
+        trace_final = None
+        if self.trace is not None:
+            # fold the REAL chaos actions in (kill_by_count deaths were
+            # already recorded at their assignment transaction)
+            for ev in chaos.events:
+                if ev.action == "kill":
+                    self.trace.event(trc.EV_DEATH, ev.t, ev.wid,
+                                     detail=ev.detail or "SIGKILL")
+                elif ev.action == "stop":
+                    self.trace.event(trc.EV_FREEZE, ev.t, ev.wid,
+                                     detail=ev.detail)
+                elif ev.action != "kill_by_count":
+                    self.trace.event(trc.EV_CHAOS, ev.t, ev.wid,
+                                     detail=f"{ev.action}: {ev.detail}")
+            trace_final = self.trace.finalize(
+                mode="process", clock="wall", n_tasks=queue.N,
+                n_workers=P)
         return engine.EngineStats(
             t_virtual=(math.inf if hung else wall), hung=hung,
             n_tasks=queue.N, n_finished=queue.n_finished,
@@ -589,7 +650,8 @@ class ClusterRun:
                                   key=lambda c: c.seq),
             adaptive_decisions=[],
             t_wall=wall,
-            chaos_events=list(chaos.events))
+            chaos_events=list(chaos.events),
+            trace=trace_final)
 
 
 # ----------------------------------------------------------- group master
@@ -692,6 +754,12 @@ def group_master_main(top_address: str, gid: int, listen_path: str,
                             if (len(state["done"])
                                     == state["chunk"].size):
                                 lock.notify_all()
+                elif msg[0] == "trace":
+                    # relay worker-recorded spans upward untouched —
+                    # the TOP master owns clock alignment (one shared
+                    # CLOCK_MONOTONIC, one offset)
+                    with up_lock:
+                        up.send(msg)
                 elif msg[0] == "error":
                     # relay the local worker's exception to the TOP
                     # master so the run_threaded re-raise contract

@@ -81,15 +81,27 @@ class FnRunner:
 
 # -------------------------------------------------------------- child main
 def worker_main(address: str, wid: int, factory: Any,
-                sleep_per_task: float = 0.0, poll: float = 1e-3) -> None:
+                sleep_per_task: float = 0.0, poll: float = 1e-3,
+                trace: bool = False) -> None:
     """Child-process entry point: connect, say hello, self-schedule.
 
     ``factory`` is the runner (already the callable, or anything whose
     ``setup()`` builds heavy state in-child).  Any exception is reported
     upward as an ``("error", wid, repr)`` message before exiting, so an
     errored run surfaces instead of silently hanging the master.
+
+    With ``trace`` on, the worker records its execution spans locally
+    (ABSOLUTE ``time.monotonic()`` timestamps — CLOCK_MONOTONIC is
+    system-wide on this single-host testbed, so the master aligns them
+    by subtracting its own run-start instant) and ships the pending
+    batch as a ``("trace", wid, rows)`` message immediately before each
+    report and at clean shutdown.  A SIGKILLed worker loses whatever it
+    had not shipped yet — its lane simply ends, which is exactly what a
+    flight recorder should show.
     """
+    from repro.core.trace import EV_EXEC   # int constant; import is cheap
     conn = transport.connect(address)
+    pending: list = []
     try:
         conn.send(("hello", wid, os.getpid()))
         runner = factory
@@ -100,6 +112,8 @@ def worker_main(address: str, wid: int, factory: Any,
             conn.send(("request", wid))
             msg = conn.recv()
             if msg is None or msg[0] == "done":
+                if pending:
+                    conn.send(("trace", wid, pending))
                 return
             if msg[0] == "wait":
                 time.sleep(msg[1])
@@ -110,6 +124,11 @@ def worker_main(address: str, wid: int, factory: Any,
             if sleep_per_task > 0.0:
                 time.sleep(sleep_per_task * chunk.size)
             dt = time.monotonic() - t0
+            if trace:
+                pending.append((EV_EXEC, t0, wid, chunk.seq, chunk.start,
+                                chunk.size, chunk.origin_seq, dt))
+                conn.send(("trace", wid, pending))
+                pending = []
             conn.send(("report", wid, chunk, payload, dt,
                        {wid: chunk.size}))
     except transport.TransportError:

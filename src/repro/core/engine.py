@@ -53,6 +53,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core import fastpath, rdlb
+from repro.core import trace as trc
 
 # Event kinds.  *_ARRIVE are master-side (message already in flight —
 # processed even if the sender died after sending); REQUEST/COMPLETE are
@@ -145,10 +146,52 @@ class EngineStats:
     fast_forwarded: int = 0      # chunks handled by the vectorized
                                  # fast-forward (repro.core.fastpath);
                                  # 0 when the scalar event loop ran alone
+    trace: Any = None            # finalized core.trace.Trace when the run
+                                 # was recorded (ExecutionSpec.trace);
+                                 # None otherwise — tracing is opt-in
 
     @property
     def hang(self) -> bool:
         return self.hung
+
+    def to_dict(self, *, include_log: bool = False,
+                include_trace: bool = True) -> dict:
+        """JSON-serializable run record (``python -m repro run
+        --emit-json``).  The assignment log is large and off by default;
+        the trace rides along when present unless suppressed."""
+
+        def _rec(x: Any) -> Any:
+            f = getattr(x, "to_dict", None)
+            if callable(f):
+                return f()
+            if dataclasses.is_dataclass(x) and not isinstance(x, type):
+                return dataclasses.asdict(x)
+            return repr(x)
+
+        d = dict(
+            t_virtual=(None if math.isinf(self.t_virtual)
+                       else float(self.t_virtual)),
+            hung=bool(self.hung), n_tasks=int(self.n_tasks),
+            n_finished=int(self.n_finished),
+            n_assignments=int(self.n_assignments),
+            n_duplicates=int(self.n_duplicates),
+            wasted_tasks=int(self.wasted_tasks),
+            by_worker={str(k): int(v)
+                       for k, v in sorted(self.by_worker.items())},
+            worker_busy=np.asarray(self.worker_busy).tolist(),
+            worker_idle=np.asarray(self.worker_idle).tolist(),
+            survivors=[int(w) for w in self.survivors],
+            t_wall=float(self.t_wall),
+            fast_forwarded=int(self.fast_forwarded),
+            adaptive_decisions=[_rec(x) for x in self.adaptive_decisions],
+            chaos_events=[_rec(x) for x in self.chaos_events],
+        )
+        if include_log:
+            d["assignment_log"] = [dataclasses.asdict(c)
+                                   for c in self.assignment_log]
+        if include_trace and self.trace is not None:
+            d["trace"] = self.trace.to_dict()
+        return d
 
 
 class Engine:
@@ -181,10 +224,16 @@ class Engine:
                  horizon: float = 1e7,
                  record_feedback: bool = True,
                  max_fruitless_polls: Optional[int] = None,
-                 adaptive: Any = None) -> None:
+                 adaptive: Any = None,
+                 trace: Optional[trc.TraceRecorder] = None) -> None:
         self.queue = queue
         self.workers = workers
         self.backend = backend
+        # Flight recorder (core.trace).  None when off — every emission
+        # site below is a single ``if tr is not None`` guard, so the
+        # untraced hot path pays one identity test per transaction and
+        # allocates nothing.
+        self.trace = trace
         self.h = h
         self.horizon = horizon
         self.record_feedback = record_feedback
@@ -226,8 +275,24 @@ class Engine:
         self.by_worker[wid] = self.by_worker.get(wid, 0) + chunk.size
         return payload
 
+    def _finalize_trace(self, mode: str, clock: str):
+        """Seal the recorder into an immutable Trace (None when off).
+        Adaptive decision points are folded in here — the controller
+        already timestamps its DecisionRecords on the run's clock."""
+        tr = self.trace
+        if tr is None:
+            return None
+        if self.adaptive is not None:
+            for d in getattr(self.adaptive, "decisions", ()):
+                tr.event(trc.EV_DECISION, d.t, -1,
+                         aux=int(bool(d.swapped)),
+                         detail=f"{d.incumbent}->{d.chosen}")
+        return tr.finalize(mode=mode, clock=clock,
+                           n_tasks=self.queue.N,
+                           n_workers=len(self.workers))
+
     def _stats(self, t_par: float, hung: bool,
-               t_wall: float = 0.0) -> EngineStats:
+               t_wall: float = 0.0, trace: Any = None) -> EngineStats:
         P = len(self.workers)
         busy = np.array([w.busy for w in self.workers])
         idle = np.zeros(P)
@@ -263,7 +328,8 @@ class Engine:
                                              ()))
                                 if self.adaptive is not None else []),
             t_wall=t_wall,
-            fast_forwarded=self._ff_chunks)
+            fast_forwarded=self._ff_chunks,
+            trace=trace)
 
     # ---------------------------------------------------- virtual-time mode
     def run(self) -> EngineStats:
@@ -272,6 +338,7 @@ class Engine:
         queue = self.queue
         workers = self._by_wid
         h = self.h
+        tr = self.trace
         wall0 = time.monotonic()
         if self.adaptive is not None:
             self.adaptive.bind(self)       # may re-plan at t=0
@@ -301,9 +368,13 @@ class Engine:
                     for w in self.workers]
         heapq.heapify(heap)
 
-        def assign(wid: int, t_master: float) -> bool:
+        def assign(wid: int, t_master: float,
+                   t_arrival: float = math.nan) -> bool:
             """Master (busy until t_master) assigns work to ``wid``.
-            Returns True iff an assignment was made."""
+            Returns True iff an assignment was made.  ``t_arrival`` is
+            when the triggering message reached the master — the gap to
+            ``t_master`` is the transaction's dispatch latency (queueing
+            behind the busy master + h)."""
             nonlocal master_free, inflight
             w = workers[wid]
             c = queue.request(wid)
@@ -324,15 +395,30 @@ class Engine:
                 return False
             if self._keep_append_log:
                 self.assignment_log.append(c)
+            if tr is not None:
+                tr.event(trc.EV_REISSUE if c.duplicate else trc.EV_ASSIGN,
+                         t_master, wid, c.seq, c.start, c.size,
+                         aux=c.origin_seq,
+                         dt=(t_master - t_arrival
+                             if t_arrival == t_arrival else h))
             if w.fails_by_count():
+                if tr is not None:
+                    tr.event(trc.EV_DEATH, t_master, wid, c.seq, c.start,
+                             c.size, detail="fail_after_tasks")
                 w.alive = False               # dies holding the chunk
                 return True
             reply_at = t_master + w.msg_latency   # chunk reaches worker
             done_at = reply_at + self.backend.cost(c, wid) / w.speed
             if w.fail_time is not None and done_at >= w.fail_time:
+                if tr is not None:
+                    tr.event(trc.EV_DEATH, w.fail_time, wid, c.seq,
+                             c.start, c.size, detail="fail_time")
                 w.alive = False               # dies mid-chunk
                 return True
             payload = self._execute(c, wid)
+            if tr is not None:
+                tr.event(trc.EV_EXEC, reply_at, wid, c.seq, c.start,
+                         c.size, aux=c.origin_seq, dt=done_at - reply_at)
             w.busy += done_at - reply_at
             w.last_done = done_at
             inflight += 1
@@ -350,6 +436,10 @@ class Engine:
 
             if kind == REQUEST:                        # worker-side send
                 if not w.alive_at(t):
+                    if tr is not None and w.alive:
+                        tr.event(trc.EV_DEATH,
+                                 w.fail_time if w.fail_time is not None
+                                 else t, wid, detail="fail_time")
                     w.alive = False
                     continue
                 heapq.heappush(heap, (t + w.msg_latency, next(counter),
@@ -361,7 +451,7 @@ class Engine:
             elif kind == REQ_ARRIVE:                   # master transaction
                 start = max(t, master_free)
                 master_free = start + h
-                if assign(wid, start + h):
+                if assign(wid, start + h, t):
                     fruitless = 0
                 elif inflight == 0:
                     # No completion can ever arrive: only repeated polls
@@ -379,6 +469,14 @@ class Engine:
                     self.backend.commit(chunk, wid, payload, newly)
                 compute = self.backend.cost(chunk, chunk.pe)
                 compute /= workers[chunk.pe].speed
+                if tr is not None:
+                    n_new = newly if isinstance(newly, int) else len(newly)
+                    tr.event(trc.EV_REPORT, start + h, wid, chunk.seq,
+                             chunk.start, chunk.size, aux=n_new,
+                             dt=compute)
+                    if not self._trivial_commit:
+                        tr.event(trc.EV_COMMIT, start + h, wid, chunk.seq,
+                                 aux=n_new)
                 self._feedback(chunk, compute, 2 * w.msg_latency + h)
                 if newly:
                     fruitless = 0
@@ -395,12 +493,13 @@ class Engine:
                 # chunk.  (Count-based fail-stop triggers INSIDE assign —
                 # the worker receives the chunk and dies holding it.)
                 if w.alive_at(start + h):
-                    assign(wid, start + h)
+                    assign(wid, start + h, t)
 
         done = queue.done and not hung
         t_par = t_done if done else math.inf
         return self._stats(t_par, not done,
-                           t_wall=time.monotonic() - wall0)
+                           t_wall=time.monotonic() - wall0,
+                           trace=self._finalize_trace("virtual", "virtual"))
 
     # ------------------------------------------------------- threaded mode
     def run_threaded(self, *, poll: float = 1e-3,
@@ -425,6 +524,7 @@ class Engine:
         # (max_fruitless_polls is not None) tightens it.
         max_polls = (self.max_fruitless_polls if self._fruitless_explicit
                      else math.inf)
+        tr = self.trace
         t0 = time.monotonic()
         errors: list[BaseException] = []
         if self.adaptive is not None:
@@ -449,8 +549,16 @@ class Engine:
                 if queue.done:
                     return
                 if failed_now():
+                    if tr is not None:
+                        tr.event(trc.EV_DEATH, time.monotonic() - t0,
+                                 w.wid, detail="fail_time")
                     return
-                chunk = queue.request(w.wid)
+                if tr is None:
+                    chunk = queue.request(w.wid)
+                else:
+                    _rq0 = time.monotonic()
+                    chunk = queue.request(w.wid)
+                    _rq_lat = time.monotonic() - _rq0
                 if chunk is None:
                     if queue.done:
                         return
@@ -479,7 +587,17 @@ class Engine:
                 if self._keep_append_log:
                     with self._commit_lock:
                         self.assignment_log.append(chunk)
+                if tr is not None:
+                    tr.event(trc.EV_REISSUE if chunk.duplicate
+                             else trc.EV_ASSIGN,
+                             time.monotonic() - t0, w.wid, chunk.seq,
+                             chunk.start, chunk.size,
+                             aux=chunk.origin_seq, dt=_rq_lat)
                 if w.fails_by_count():
+                    if tr is not None:
+                        tr.event(trc.EV_DEATH, time.monotonic() - t0,
+                                 w.wid, chunk.seq, chunk.start,
+                                 chunk.size, detail="fail_after_tasks")
                     w.alive = False   # dies holding the chunk
                     return
                 t_exec0 = time.monotonic()
@@ -487,13 +605,18 @@ class Engine:
                 if w.sleep_per_task > 0.0:
                     time.sleep(w.sleep_per_task * chunk.size)
                 if failed_now():
+                    if tr is not None:
+                        tr.event(trc.EV_DEATH, time.monotonic() - t0,
+                                 w.wid, chunk.seq, chunk.start,
+                                 chunk.size, detail="fail_time")
                     return            # dies holding the chunk: the
                                       # report never happens, rDLB must
                                       # re-issue it elsewhere, and NO
                                       # work is credited (tasks_done /
                                       # by_worker count reported work
                                       # only — same as a killed process)
-                w.busy += time.monotonic() - t_exec0
+                dt_exec = time.monotonic() - t_exec0
+                w.busy += dt_exec
                 w.last_done = time.monotonic() - t0
                 with self._commit_lock:
                     w.tasks_done += chunk.size
@@ -501,7 +624,16 @@ class Engine:
                                              + chunk.size)
                     newly = queue.report_tasks(chunk)
                     self.backend.commit(chunk, w.wid, payload, newly)
-                    self._feedback(chunk, time.monotonic() - t_exec0, 0.0)
+                    if tr is not None:
+                        # EXEC is only credited at report time in this
+                        # mode (work a worker dies holding never counts)
+                        tr.event(trc.EV_EXEC, t_exec0 - t0, w.wid,
+                                 chunk.seq, chunk.start, chunk.size,
+                                 aux=chunk.origin_seq, dt=dt_exec)
+                        tr.event(trc.EV_REPORT, time.monotonic() - t0,
+                                 w.wid, chunk.seq, chunk.start,
+                                 chunk.size, aux=len(newly), dt=dt_exec)
+                    self._feedback(chunk, dt_exec, 0.0)
                 if self.adaptive is not None and not queue.done:
                     # OUTSIDE the commit lock: a decision point may run a
                     # whole forecast sweep, which must not stall other
@@ -527,4 +659,5 @@ class Engine:
             raise errors[0]
         wall = time.monotonic() - t0
         hung = not queue.done
-        return self._stats(math.inf if hung else wall, hung, t_wall=wall)
+        return self._stats(math.inf if hung else wall, hung, t_wall=wall,
+                           trace=self._finalize_trace("threaded", "wall"))

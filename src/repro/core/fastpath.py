@@ -127,12 +127,15 @@ def fast_forward(eng) -> "Handoff | None":
     off = offm + h
     arrive = np.full(P, lat)              # round 0: REQ_ARRIVE at t=lat
     m_init = 0.0
-    M = None
+    M = M0 = None
     for r in range(K):
         cm = np.maximum.accumulate(arrive - offm)
         if m_init > 0.0:
             np.maximum(cm, m_init, out=cm)
         M = cm + off                      # this round's master end-times
+        if r == 0:
+            M0 = M                        # first assignment per worker —
+                                          # the trace span's left edge
         m_init = float(M[-1])
         done = (M + lat) + compute[r]
         arrive = done + lat               # next round's REP_ARRIVE
@@ -172,6 +175,20 @@ def fast_forward(eng) -> "Handoff | None":
             s.mean_iter_time += delta * n_b / n
             s.m2_iter_time += float(m2_b[i]) + delta * delta * n_a * n_b / n
             s.n_samples = n
+
+    # --- trace: one synthesized bulk span per worker ----------------------
+    # Tracing never forces the scalar loop: the whole window appears as P
+    # EV_FF_SPAN records — aux = chunks fast-forwarded, size = tasks
+    # assigned (the by_worker credit), start = tasks bulk-FINISHED here
+    # ((K-1)·c; the in-flight round reports as ordinary EV_REPORTs once
+    # the scalar loop resumes).
+    if eng.trace is not None:
+        from repro.core import trace as trc
+        span0 = M0 + lat                  # first chunk reaches each worker
+        for i in range(P):
+            eng.trace.event(trc.EV_FF_SPAN, float(span0[i]), i,
+                            seq=int(i), start=(K - 1) * c, size=K * c,
+                            aux=K, dt=float(done_last[i] - span0[i]))
 
     seqs = np.arange((K - 1) * P, K * P, dtype=np.int64)
     return Handoff(complete_times=done_last, inflight_seqs=seqs,

@@ -48,6 +48,10 @@ class SimResult:
     t_wall: float = 0.0          # wall-clock seconds (== t_par only in
                                  # threaded/process modes, where time IS
                                  # wall time)
+    chaos_events: list = dataclasses.field(default_factory=list)
+                                 # real OS actions (process mode)
+    trace: object = None         # core.trace.Trace when the spec enabled
+                                 # the flight recorder; None otherwise
 
     @property
     def hang(self) -> bool:
@@ -56,6 +60,37 @@ class SimResult:
     @property
     def wasted_fraction(self) -> float:
         return self.wasted_tasks / max(1, self.n_tasks)
+
+    def to_dict(self, *, include_trace: bool = True) -> dict:
+        """JSON-serializable run record (``python -m repro run
+        --emit-json``)."""
+
+        def _rec(x):
+            f = getattr(x, "to_dict", None)
+            return f() if callable(f) else (
+                dataclasses.asdict(x) if dataclasses.is_dataclass(x)
+                and not isinstance(x, type) else repr(x))
+
+        d = dict(
+            t_par=None if math.isinf(self.t_par) else float(self.t_par),
+            hang=self.hang,
+            n_finished=int(self.n_finished),
+            n_tasks=int(self.n_tasks),
+            n_assignments=int(self.n_assignments),
+            n_duplicates=int(self.n_duplicates),
+            wasted_tasks=int(self.wasted_tasks),
+            pe_busy=np.asarray(self.pe_busy).tolist(),
+            pe_idle=np.asarray(self.pe_idle).tolist(),
+            technique=self.technique,
+            scenario=self.scenario,
+            rdlb=bool(self.rdlb),
+            t_wall=float(self.t_wall),
+            adaptive_decisions=[_rec(x) for x in self.adaptive_decisions],
+            chaos_events=[_rec(x) for x in self.chaos_events],
+        )
+        if include_trace and self.trace is not None:
+            d["trace"] = self.trace.to_dict()
+        return d
 
 
 class SimBackend(engine.WorkerBackend):
