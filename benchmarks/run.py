@@ -105,14 +105,15 @@ def main(argv=None) -> None:
     quick = not args.paper
 
     from benchmarks import (fig3_performance, fig4_resilience,
-                            fig5_flexibility, fig_adaptive, fig_cluster,
-                            fig_scale, kernels_bench, roofline,
-                            theory_table)
+                            fig5_flexibility, fig_adaptive,
+                            fig_calibration, fig_cluster, fig_scale,
+                            kernels_bench, roofline, theory_table)
     modules = [
         ("fig3", fig3_performance),
         ("fig4", fig4_resilience),
         ("fig5", fig5_flexibility),
         ("fig_adaptive", fig_adaptive),
+        ("fig_calibration", fig_calibration),
         ("fig_cluster", fig_cluster),
         ("fig_scale", fig_scale),
         ("theory", theory_table),

@@ -22,6 +22,9 @@
 9. Flight recorder: trace the process-mode chaos run event by event
    and export Chrome/Perfetto JSON — the re-issue filling the killed
    worker's gap, visible on a timeline.
+10. Close the loop: calibrate the declared spec against the recorded
+    run and re-forecast — the calibrated virtual twin predicts the
+    physical run the declared twin underestimates by ~45%.
 """
 
 import sys
@@ -232,4 +235,36 @@ print(f"   {len(r9.trace)} events recorded; dispatch latency "
       f"p50={lat9['p50'] * 1e6:.0f}us p99={lat9['p99'] * 1e6:.0f}us")
 print(f"   wrote {out9} -- open it at https://ui.perfetto.dev")
 print(f"   (or: python -m repro trace summarize {out9})")
+
+print("=== 10. Record -> calibrate -> re-forecast (repro.obs) ===")
+# The declared spec says tasks take 0.005s, but the process workers
+# ALSO sleep 0.004s per task (sleep_per_task), so the declared virtual
+# twin underestimates the section-9 run by ~45%.  calibrate_trace fits
+# the spec back from the recorded run — measured per-worker speeds,
+# dispatch overhead h, message latency — while PRESERVING the declared
+# fail_time so the twin replays the same SIGKILL.  The calibrated twin
+# then predicts the physical run it was fitted on; every override (or
+# deliberate non-override) is a reason-annotated residual.
+# (CLI equivalent: python -m repro trace calibrate run.json --spec
+# spec.json -o calibrated.json)
+from repro.obs import calibrate_trace
+calib10 = calibrate_trace(r9.trace, spec9, task_times=tt6)
+twin_decl = spec9.override("execution.mode", "virtual").override(
+    "execution.trace", False)
+twin_cal = calib10.spec.override("execution.mode", "virtual").override(
+    "execution.trace", False)
+t_decl = api.simulate(twin_decl, tt6).t_par
+t_cal = api.simulate(twin_cal, tt6).t_par
+meas10 = r9.t_par       # loop time, excluding process spawn/teardown
+print(f"   measured (process run)     t = {meas10:.3f}s")
+print(f"   declared-spec virtual twin t = {t_decl:.3f}s "
+      f"({abs(t_decl - meas10) / meas10 * 100:.0f}% off)")
+print(f"   calibrated virtual twin    t = {t_cal:.3f}s "
+      f"({abs(t_cal - meas10) / meas10 * 100:.0f}% off)")
+for res10 in calib10.residuals[:3]:
+    print(f"     {res10}")
+assert abs(t_cal - meas10) < abs(t_decl - meas10)
+# In-loop: AdaptiveSpec(calibrate=True) runs this fit at every replan,
+# with an EWMA drift detector deciding when measured speeds have moved
+# enough to re-adopt — evidence lands on DecisionRecord.calibration.
 print("OK")

@@ -62,6 +62,9 @@ PY
 timeout 120 python benchmarks/fig_scale.py --dry-run
 mkdir -p benchmarks/baselines
 cp artifacts/bench/BENCH_scale.json benchmarks/baselines/BENCH_scale.json
+# ...and a repo-root copy so the cross-PR perf trajectory is a one-file
+# diff at the top of the tree
+cp artifacts/bench/BENCH_scale.json BENCH_scale.json
 timeout 300 python -m benchmarks.run --only theory --emit-json > /dev/null
 # spec-layer smokes: the facade, the CLI, and the examples cannot rot
 tmp_spec=$(mktemp /tmp/rdlb_spec_XXXXXX.json)
@@ -158,5 +161,69 @@ t_on = best_of(spec.override("execution.trace", True))
 assert t_on <= t_off * 1.10 + 0.05, (
     f"trace overhead gate: traced {t_on:.3f}s vs untraced {t_off:.3f}s")
 print(f"trace-overhead,ok,off={t_off:.3f}s,on={t_on:.3f}s")
+# live telemetry must honor the same budget: streaming every event
+# through the MetricsHub estimators (store-less recorder) stays within
+# 1.10x of the fully-off run on the same P=512/N=65536 perf-smoke
+t_m = best_of(spec.override("execution.metrics", True))
+assert t_m <= t_off * 1.10 + 0.05, (
+    f"metrics overhead gate: metered {t_m:.3f}s vs off {t_off:.3f}s")
+print(f"metrics-overhead,ok,off={t_off:.3f}s,on={t_m:.3f}s")
+PY
+# calibration smoke: record a short threaded chaos run, fit the spec
+# back through the CLI (`trace calibrate`), and the calibrated virtual
+# twin must predict the measured makespan better than the declared one.
+# Threaded wall time comes from sleep_per_task (0.006s) while the
+# declared workload says 0.004s/task, so the declared twin is ~33% off
+# by construction and calibration must close most of that — determinism
+# makes this a tight gate, and the hard timeout keeps a regression from
+# wedging CI.
+timeout 120 python - <<'PY'
+import json
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+from repro import api
+
+tmp = Path(tempfile.mkdtemp(prefix="rdlb_calib_"))
+doc = {
+    "workload": {"kind": "uniform", "n": 96, "t": 0.004},
+    "spec": api.RunSpec(
+        scheduling=api.SchedulingSpec(technique="FAC"),
+        cluster=api.ClusterSpec(3, tuple(
+            api.WorkerSpec(sleep_per_task=0.006,
+                           fail_time=0.08 if w == 1 else None)
+            for w in range(3)), name="ci_calib"),
+        execution=api.ExecutionSpec(mode="threaded", h=0.0,
+                                    stall_timeout=10.0)).to_dict(),
+}
+(tmp / "run.json").write_text(json.dumps(doc))
+for attempt in range(3):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro", "run", "--spec",
+         str(tmp / "run.json"), "--trace", str(tmp / "trace.json")],
+        capture_output=True, text=True, check=True)
+    t_meas = float(out.stdout.splitlines()[0].split(",")[5])
+    subprocess.run(
+        [sys.executable, "-m", "repro", "trace", "calibrate",
+         str(tmp / "trace.json"), "--spec", str(tmp / "run.json"),
+         "-o", str(tmp / "calibrated.json")],
+        capture_output=True, text=True, check=True)
+    tt = np.full(96, 0.004)
+    decl = api.RunSpec.from_dict(doc["spec"]).override(
+        "execution.mode", "virtual")
+    cal = api.RunSpec.load(tmp / "calibrated.json").override(
+        "execution.mode", "virtual")
+    err_decl = abs(api.simulate(decl, tt).t_par - t_meas) / t_meas
+    err_cal = abs(api.simulate(cal, tt).t_par - t_meas) / t_meas
+    if err_cal < err_decl:
+        break
+assert err_cal < err_decl, (
+    f"calibration gate: calibrated twin {err_cal:.1%} off vs "
+    f"declared {err_decl:.1%}")
+print(f"calibration-smoke,ok,err_decl={err_decl:.3f},"
+      f"err_cal={err_cal:.3f}")
 PY
 python -m pytest -x -q "$@"

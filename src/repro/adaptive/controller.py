@@ -62,6 +62,13 @@ class AdaptiveConfig:
     device_sweep:   batch the portfolio forecast into one jit/vmap call
         on core.devicesim (candidates outside the homogeneous
         fixed-chunk regime fall back to the scalar engine).
+    calibrate:      forecast every sweep from the CALIBRATED cluster
+        state: per-worker measured speeds (PEStats-derived) replace the
+        snapshot's declared speeds (repro.obs.calibrate.SpecCalibrator).
+    drift_threshold: re-calibrate when the worst per-worker EWMA drift
+        between measured speed and the speed forecasts currently use
+        exceeds this fraction.
+    drift_alpha:    EWMA smoothing for the drift detector.
     """
     portfolio: tuple = DEFAULT_PORTFOLIO
     decision_every_chunks: Optional[int] = 64
@@ -75,6 +82,9 @@ class AdaptiveConfig:
     forecast_h: Optional[float] = None
     seed: int = 0
     device_sweep: bool = False
+    calibrate: bool = False
+    drift_threshold: float = 0.15
+    drift_alpha: float = 0.5
 
 
 @dataclasses.dataclass
@@ -87,6 +97,12 @@ class DecisionRecord:
     incumbent: str              # label of the technique/knobs before
     chosen: str                 # label after (== incumbent if no swap)
     swapped: bool
+    calibration: Optional[dict] = None
+                                # SpecCalibrator evidence when the sweep
+                                # forecast from calibrated state
+                                # (AdaptiveSpec.calibrate): measured
+                                # speeds, EWMA drift, whether this
+                                # decision (re-)adopted a calibration
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -119,6 +135,7 @@ class AdaptiveController:
         self._next_t: Optional[float] = None
         self._lock = threading.Lock()
         self._replanning = False
+        self._calibrator = None
 
     # -------------------------------------------------------- engine hooks
     def bind(self, engine) -> None:
@@ -134,6 +151,13 @@ class AdaptiveController:
             raise ValueError(
                 f"controller has {len(self._tt)} task times for a "
                 f"{engine.queue.N}-task queue")
+        self._calibrator = None
+        if cfg.calibrate:
+            from repro.obs.calibrate import SpecCalibrator  # lazy: no cycle
+            self._calibrator = SpecCalibrator(
+                task_times=self._tt,
+                threshold=cfg.drift_threshold,
+                alpha=cfg.drift_alpha)
         if cfg.plan_at_start:
             self.replan(engine, 0.0)
 
@@ -176,6 +200,12 @@ class AdaptiveController:
         if n_remaining == 0 or (self.decisions
                                 and n_remaining < cfg.min_remaining):
             return None
+        calib_info = None
+        if self._calibrator is not None:
+            # forecast from measured conditions, not declared ones; the
+            # calibrator only swaps snapshot speeds, so the sweep itself
+            # is unchanged
+            snap, calib_info = self._calibrator.apply(snap)
         incumbent = self.incumbent_candidate(engine.queue)
         portfolio = tuple(cfg.portfolio)
         if incumbent not in portfolio:
@@ -198,7 +228,8 @@ class AdaptiveController:
             predictions={c.label: p for c, p in preds},
             incumbent=incumbent.label,
             chosen=best.label if swapped else incumbent.label,
-            swapped=swapped)
+            swapped=swapped,
+            calibration=calib_info)
         self.decisions.append(rec)
         return rec
 

@@ -35,6 +35,8 @@ Usage::
     python -m repro show --spec runs/fig4_fail1.json
     python -m repro trace summarize out.json
     python -m repro trace diff a.json b.json
+    python -m repro trace calibrate out.json --spec run.json \
+        -o calibrated.json                # fit measured speeds/h back
 
 ``--trace`` forces the flight recorder on (``execution.trace``) and
 exports each run as Chrome-trace-event JSON — open it at
@@ -150,8 +152,14 @@ def cmd_run(args) -> int:
             print(f"trace,{name},{out},{len(r.trace)} events")
         if getattr(args, "emit_json", ""):
             out = _suffixed(args.emit_json, name, many)
+            rec = r.to_dict()
+            if r.trace is not None:
+                # trace-derived telemetry rides inside the record, so a
+                # record consumer needs no separate trace file
+                from repro.obs import run_telemetry
+                rec["telemetry"] = run_telemetry(r.trace)
             with open(out, "w") as f:
-                json.dump(r.to_dict(), f)
+                json.dump(rec, f)
                 f.write("\n")
             print(f"record,{name},{out}")
     if metric == "resilience":
@@ -196,18 +204,56 @@ def resilience_lines(rows, baseline_scenario: str) -> list:
 
 
 def cmd_trace(args) -> int:
-    """``trace summarize <file>`` / ``trace diff <a> <b>`` on exported
-    trace files (Chrome JSON with the embedded "repro" record, or bare
-    Trace.to_dict dumps)."""
+    """``trace summarize <file>`` / ``trace diff <a> <b>`` /
+    ``trace calibrate <file> --spec in.json -o calibrated.json`` on
+    exported trace files (Chrome JSON with the embedded "repro" record,
+    bare Trace.to_dict dumps, or --emit-json run records)."""
     from repro.core import trace as trc
     if args.action == "summarize":
         print(trc.summarize(trc.load_trace(args.files[0])))
         return 0
+    if args.action == "calibrate":
+        return _trace_calibrate(args, trc)
     if len(args.files) < 2:
         print("trace diff needs two files", file=sys.stderr)
         return 2
     print(trc.diff(trc.load_trace(args.files[0]),
                    trc.load_trace(args.files[1])))
+    return 0
+
+
+def _trace_calibrate(args, trc) -> int:
+    """Fit a calibrated RunSpec from an observed trace.
+
+    ``--spec`` takes either a bare RunSpec JSON or a run file (the
+    declared spec under its "spec" key; the workload — needed for
+    per-worker speed fits — under "workload").  ``--workload`` overrides
+    with a standalone workload JSON.  ``-o`` saves the calibrated spec.
+    """
+    from repro.obs import calibrate_trace
+    if not args.spec:
+        print("trace calibrate needs --spec <declared spec JSON>",
+              file=sys.stderr)
+        return 2
+    trace = trc.load_trace(args.files[0])
+    with open(args.spec) as f:
+        doc = json.load(f)
+    wl_doc = None
+    if "spec" in doc and not isinstance(doc.get("spec"), str):
+        declared = RunSpec.from_dict(doc["spec"])
+        wl_doc = doc.get("workload")
+    else:
+        declared = RunSpec.from_dict(doc)
+    if getattr(args, "workload", ""):
+        with open(args.workload) as f:
+            w = json.load(f)
+        wl_doc = w.get("workload", w)
+    tt = load_workload(wl_doc) if wl_doc else None
+    result = calibrate_trace(trace, declared, task_times=tt)
+    print(result.summary())
+    if getattr(args, "out", ""):
+        result.spec.save(args.out)
+        print(f"calibrated,{args.out}")
     return 0
 
 
@@ -245,8 +291,16 @@ def main(argv: Optional[list] = None) -> int:
     p_show.set_defaults(fn=cmd_show)
     p_tr = sub.add_parser("trace",
                           help="inspect exported trace files")
-    p_tr.add_argument("action", choices=("summarize", "diff"))
+    p_tr.add_argument("action", choices=("summarize", "diff", "calibrate"))
     p_tr.add_argument("files", nargs="+", help="trace JSON file(s)")
+    p_tr.add_argument("--spec", default="",
+                      help="calibrate: declared spec (bare RunSpec JSON "
+                           "or a run file with 'spec'/'workload' keys)")
+    p_tr.add_argument("--workload", default="",
+                      help="calibrate: standalone workload JSON override "
+                           "(same schema as a run file's 'workload')")
+    p_tr.add_argument("-o", "--out", default="",
+                      help="calibrate: save the calibrated RunSpec here")
     p_tr.set_defaults(fn=cmd_trace)
     args = ap.parse_args(argv)
     return args.fn(args)

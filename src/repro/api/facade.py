@@ -125,9 +125,15 @@ def build(spec: RunSpec, backend: engine.WorkerBackend, *,
         policy = AdaptiveController(task_times=task_times,
                                     config=spec.adaptive.to_config())
     recorder = None
-    if e.trace:
+    if e.trace or e.metrics:
         from repro.core import trace as _trc            # lazy import
-        recorder = _trc.TraceRecorder()
+        hub = None
+        if e.metrics:
+            from repro.obs import MetricsHub            # lazy import
+            hub = MetricsHub(n_workers=spec.cluster.n_workers)
+        # metrics without trace: the recorder runs store-less — events
+        # stream through the hub but no rows are kept
+        recorder = _trc.TraceRecorder(hub=hub, store=e.trace)
     if e.mode == "process":
         if policy is not None:
             raise ValueError(
@@ -198,4 +204,5 @@ def simulate(spec: RunSpec, task_times: Sequence[float], *,
         t_wall=st.t_wall,
         chaos_events=st.chaos_events,
         trace=st.trace,
+        metrics=st.metrics,
     )

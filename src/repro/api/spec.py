@@ -333,6 +333,12 @@ class ExecutionSpec:
     ``trace`` turns on the flight recorder (``repro.core.trace``): the
     run's event stream lands on ``EngineStats.trace`` /
     ``SimResult.trace``.  Off by default — an untraced run pays nothing.
+    ``metrics`` turns on live telemetry (``repro.obs.MetricsHub``): the
+    recorder streams every event through online estimators and the
+    summary lands on ``EngineStats.metrics`` / ``SimResult.metrics``.
+    Works with or without ``trace`` — metrics alone runs the recorder
+    store-less (no rows retained), so long runs can be metered without
+    holding a trace in memory.  Same zero-cost-when-off contract.
     """
     mode: str = "virtual"
     h: float = 1e-4
@@ -343,6 +349,7 @@ class ExecutionSpec:
     n_groups: int = 1
     wall_timeout: Optional[float] = None
     trace: bool = False
+    metrics: bool = False
 
     def __post_init__(self):
         if self.mode not in VALID_MODES:
@@ -369,7 +376,8 @@ class ExecutionSpec:
                    max_fruitless_polls=d.get("max_fruitless_polls"),
                    n_groups=int(d.get("n_groups", 1)),
                    wall_timeout=d.get("wall_timeout"),
-                   trace=bool(d.get("trace", False)))
+                   trace=bool(d.get("trace", False)),
+                   metrics=bool(d.get("metrics", False)))
 
 
 # ---------------------------------------------------------------- candidate
@@ -467,6 +475,14 @@ class AdaptiveSpec:
     ``enabled=False`` (default) runs the spec statically.  An empty
     ``portfolio`` means :data:`DEFAULT_PORTFOLIO`.  Field semantics match
     ``repro.adaptive.AdaptiveConfig``.
+
+    ``calibrate=True`` makes every portfolio sweep forecast from the
+    *calibrated* cluster state instead of the declared one: per-worker
+    measured speeds (from the engine's own PEStats) replace snapshot
+    speeds, and an EWMA drift detector (``drift_threshold``,
+    ``drift_alpha``) re-calibrates when measured conditions diverge from
+    the speeds the forecaster is currently using — each decision's
+    DecisionRecord carries the calibration evidence.
     """
     enabled: bool = False
     portfolio: tuple = ()
@@ -481,6 +497,9 @@ class AdaptiveSpec:
     forecast_h: Optional[float] = None
     seed: int = 0
     device_sweep: bool = False
+    calibrate: bool = False
+    drift_threshold: float = 0.15
+    drift_alpha: float = 0.5
 
     def __post_init__(self):
         object.__setattr__(self, "portfolio", tuple(
@@ -502,7 +521,10 @@ class AdaptiveSpec:
             prewarm=self.prewarm,
             forecast_h=self.forecast_h,
             seed=self.seed,
-            device_sweep=self.device_sweep)
+            device_sweep=self.device_sweep,
+            calibrate=self.calibrate,
+            drift_threshold=self.drift_threshold,
+            drift_alpha=self.drift_alpha)
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "AdaptiveSpec":

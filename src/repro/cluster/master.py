@@ -651,7 +651,10 @@ class ClusterRun:
             adaptive_decisions=[],
             t_wall=wall,
             chaos_events=list(chaos.events),
-            trace=trace_final)
+            trace=trace_final,
+            metrics=(self.trace.hub.snapshot()
+                     if self.trace is not None
+                     and self.trace.hub is not None else None))
 
 
 # ----------------------------------------------------------- group master

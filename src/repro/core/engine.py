@@ -149,6 +149,9 @@ class EngineStats:
     trace: Any = None            # finalized core.trace.Trace when the run
                                  # was recorded (ExecutionSpec.trace);
                                  # None otherwise — tracing is opt-in
+    metrics: Any = None          # MetricsHub.snapshot() dict when live
+                                 # telemetry was on (ExecutionSpec.metrics);
+                                 # None otherwise — metering is opt-in
 
     @property
     def hang(self) -> bool:
@@ -191,6 +194,8 @@ class EngineStats:
                                    for c in self.assignment_log]
         if include_trace and self.trace is not None:
             d["trace"] = self.trace.to_dict()
+        if self.metrics is not None:
+            d["metrics"] = self.metrics
         return d
 
 
@@ -291,6 +296,13 @@ class Engine:
                            n_tasks=self.queue.N,
                            n_workers=len(self.workers))
 
+    def _hub_snapshot(self) -> Any:
+        """Live-telemetry summary when a MetricsHub rode the recorder."""
+        tr = self.trace
+        if tr is None or tr.hub is None:
+            return None
+        return tr.hub.snapshot()
+
     def _stats(self, t_par: float, hung: bool,
                t_wall: float = 0.0, trace: Any = None) -> EngineStats:
         P = len(self.workers)
@@ -329,7 +341,8 @@ class Engine:
                                 if self.adaptive is not None else []),
             t_wall=t_wall,
             fast_forwarded=self._ff_chunks,
-            trace=trace)
+            trace=trace,
+            metrics=self._hub_snapshot())
 
     # ---------------------------------------------------- virtual-time mode
     def run(self) -> EngineStats:

@@ -52,6 +52,8 @@ class SimResult:
                                  # real OS actions (process mode)
     trace: object = None         # core.trace.Trace when the spec enabled
                                  # the flight recorder; None otherwise
+    metrics: object = None       # MetricsHub.snapshot() dict when the spec
+                                 # enabled live telemetry; None otherwise
 
     @property
     def hang(self) -> bool:
@@ -90,6 +92,8 @@ class SimResult:
         )
         if include_trace and self.trace is not None:
             d["trace"] = self.trace.to_dict()
+        if self.metrics is not None:
+            d["metrics"] = self.metrics
         return d
 
 

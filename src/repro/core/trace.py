@@ -124,12 +124,23 @@ class TraceRecorder:
     Drivers hold ``trace=None`` when tracing is off and guard every
     emission with ``if tr is not None`` — the recorder itself is never
     consulted on an untraced run.
+
+    ``hub`` is an optional :class:`repro.obs.metrics.MetricsHub`: every
+    event (including rows merged from worker processes) is streamed into
+    it under the same lock, so any driver that can trace can meter.
+    ``store=False`` runs the recorder metrics-only: events feed the hub
+    but no rows are retained and ``finalize`` returns None — live
+    telemetry without the memory cost of a stored trace.
     """
 
-    __slots__ = ("meta", "_pending", "_details", "_blocks", "_lock")
+    __slots__ = ("meta", "hub", "store", "_pending", "_details",
+                 "_blocks", "_lock")
 
-    def __init__(self, meta: Optional[dict] = None) -> None:
+    def __init__(self, meta: Optional[dict] = None, hub=None,
+                 store: bool = True) -> None:
         self.meta = dict(meta or {})
+        self.hub = hub
+        self.store = store
         self._pending: list = []
         self._details: dict[int, str] = {}   # global row index -> detail
         self._blocks: list = []              # sealed column dicts
@@ -139,9 +150,17 @@ class TraceRecorder:
     def event(self, kind: int, t: float, wid: int, seq: int = -1,
               start: int = -1, size: int = 0, aux: int = 0,
               dt: float = 0.0, detail: Optional[str] = None) -> None:
+        if not self.store:                       # metrics-only fast path
+            with self._lock:
+                if self.hub is not None:
+                    self.hub.observe(kind, t, wid, seq, start, size,
+                                     aux, dt)
+            return
         row = (kind, float(t), int(wid), int(seq), int(start),
                int(size), int(aux), float(dt))
         with self._lock:
+            if self.hub is not None:
+                self.hub.observe(*row)
             if detail is not None:
                 n = (len(self._blocks) * CHUNK_EVENTS
                      + len(self._pending))
@@ -180,13 +199,17 @@ class TraceRecorder:
         with self._lock:
             for r in rows:
                 detail = r[8] if len(r) > 8 else None
+                row = (int(r[0]), float(r[1]) + offset, int(r[2]),
+                       int(r[3]), int(r[4]), int(r[5]), int(r[6]),
+                       float(r[7]))
+                if self.hub is not None:
+                    self.hub.observe(*row)
+                if not self.store:
+                    continue
                 if detail is not None:
                     self._details[len(self._blocks) * CHUNK_EVENTS
                                   + len(self._pending)] = detail
-                self._pending.append(
-                    (int(r[0]), float(r[1]) + offset, int(r[2]),
-                     int(r[3]), int(r[4]), int(r[5]), int(r[6]),
-                     float(r[7])))
+                self._pending.append(row)
                 if len(self._pending) >= CHUNK_EVENTS:
                     self._seal_locked()
 
@@ -196,10 +219,13 @@ class TraceRecorder:
             return len(self._blocks) * CHUNK_EVENTS + len(self._pending)
 
     # ---------------------------------------------------------- finalize
-    def finalize(self, **meta) -> "Trace":
+    def finalize(self, **meta) -> Optional["Trace"]:
         """Seal everything and return the immutable :class:`Trace`,
         sorted by timestamp (stable, so same-instant events keep their
-        emission order)."""
+        emission order).  Metrics-only recorders (``store=False``)
+        return None — the hub's snapshot is the run's output."""
+        if not self.store:
+            return None
         with self._lock:
             self._seal_locked()
             blocks, details = self._blocks, dict(self._details)
@@ -559,13 +585,16 @@ def save_chrome(trace: Trace, path) -> None:
 
 
 def load_trace(path) -> Trace:
-    """Read a trace back from either an exported Chrome JSON file (the
-    raw records ride under the ``"repro"`` key) or a bare
-    ``Trace.to_dict()`` JSON dump."""
+    """Read a trace back from an exported Chrome JSON file (the raw
+    records ride under the ``"repro"`` key), a bare ``Trace.to_dict()``
+    JSON dump, or an emitted run record whose ``"trace"`` key carries
+    the dump (``repro run --emit-json`` with tracing on)."""
     with open(path) as f:
         d = json.load(f)
     if "repro" in d:
         d = d["repro"]
+    elif isinstance(d.get("trace"), dict) and "columns" in d["trace"]:
+        d = d["trace"]
     if "columns" not in d:
         raise ValueError(f"{path} carries no repro trace records")
     return Trace.from_dict(d)

@@ -1,0 +1,23 @@
+"""Streaming telemetry and spec calibration over the flight recorder.
+
+The flight recorder (``repro.core.trace``) made every run's event stream
+available; this package converts that stream into *decisions*:
+
+  * :mod:`repro.obs.metrics` — online estimators (Welford mean/variance,
+    P² quantile sketches, EWMA rates) behind a :class:`MetricsHub` that
+    every driver ticks through its ``TraceRecorder`` — same
+    zero-cost-when-off contract as tracing (``ExecutionSpec.metrics``).
+  * :mod:`repro.obs.calibrate` — fit a calibrated ``RunSpec`` back from
+    an observed run (measured per-worker speeds, dispatch overhead h,
+    inter-chunk latency), with reason-annotated residuals; plus the
+    in-loop :class:`SpecCalibrator` the adaptive controller uses when
+    ``AdaptiveSpec.calibrate=True`` (EWMA drift detection → forecast
+    from measured conditions, not declared ones).
+"""
+
+from repro.obs.metrics import (  # noqa: F401
+    EWMA, MetricsHub, P2Quantile, Welford, run_telemetry,
+)
+from repro.obs.calibrate import (  # noqa: F401
+    CalibrationResult, Residual, SpecCalibrator, calibrate_trace,
+)

@@ -1,0 +1,365 @@
+"""Observability-layer tests: streaming estimators, the MetricsHub in
+every execution mode, offline + in-loop calibration, and the closed
+loop — a calibrated virtual twin predicting a held-out process run.
+"""
+
+import json
+import math
+import sys
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import facade
+from repro.core.simulator import SimBackend
+from repro.obs import (EWMA, MetricsHub, P2Quantile, Welford,
+                       SpecCalibrator, calibrate_trace, run_telemetry)
+
+
+def _spec(P, mode, *, workers=(), technique="FAC", trace=True,
+          metrics=True):
+    return api.RunSpec(
+        scheduling=api.SchedulingSpec(technique=technique),
+        cluster=api.ClusterSpec(n_workers=P, workers=workers,
+                                name=f"obs_{mode}"),
+        execution=api.ExecutionSpec(
+            mode=mode, h=1e-4 if mode == "virtual" else 0.0,
+            stall_timeout=10.0, wall_timeout=60.0,
+            trace=trace, metrics=metrics))
+
+
+# ------------------------------------------------------------- estimators
+def test_welford_matches_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.normal(3.0, 2.0, 500)
+    w = Welford()
+    for x in xs:
+        w.add(float(x))
+    assert w.n == 500
+    assert w.mean == pytest.approx(float(xs.mean()), rel=1e-12)
+    assert w.std == pytest.approx(float(xs.std(ddof=1)), rel=1e-12)
+
+
+@pytest.mark.parametrize("p", [0.5, 0.9, 0.99])
+def test_p2_quantile_tracks_percentile(p):
+    rng = np.random.default_rng(1)
+    xs = rng.lognormal(0.0, 0.5, 4000)
+    q = P2Quantile(p)
+    for x in xs:
+        q.add(float(x))
+    exact = float(np.percentile(xs, p * 100))
+    # P² is an approximation; 10% relative is its documented ballpark
+    assert q.value() == pytest.approx(exact, rel=0.10)
+
+
+def test_p2_quantile_small_n_exact():
+    q = P2Quantile(0.5)
+    for x in (5.0, 1.0, 3.0):
+        q.add(x)
+    assert q.value() == pytest.approx(3.0)
+    assert P2Quantile(0.5).value() == 0.0
+
+
+def test_ewma():
+    e = EWMA(alpha=0.5)
+    assert e.value is None
+    e.add(1.0)
+    assert e.value == 1.0
+    e.add(0.0)
+    assert e.value == pytest.approx(0.5)
+
+
+# ----------------------------------------------------------- hub vs trace
+@pytest.mark.parametrize("mode", ["virtual", "threaded"])
+def test_hub_matches_trace_reconstruction(mode):
+    """The streaming hub's exact counters must agree with the offline
+    reconstruction from the stored trace of the SAME run."""
+    P, N = 4, 200
+    tt = np.abs(np.random.default_rng(2).normal(0.002, 5e-4, N)) + 1e-4
+    # threaded tasks only take wall time via sleep_per_task — without it
+    # the run ends before the fail instant and no death ever happens
+    sleep = 0.002 if mode == "threaded" else 0.0
+    workers = ((api.WorkerSpec(sleep_per_task=sleep),) * (P - 1)
+               + (api.WorkerSpec(sleep_per_task=sleep, fail_time=0.06),))
+    spec = _spec(P, mode, workers=workers)
+    st = facade.run(spec, facade.build(spec, SimBackend(tt), n_tasks=N))
+    assert not st.hung and st.n_finished == N
+    m, c = st.metrics, st.trace.counters()
+    assert m["finished"] == c["n_finished"] == N
+    assert m["n_dispatches"] == c["n_assignments"]
+    assert m["n_duplicates"] == c["n_duplicates"]
+    assert m["wasted_tasks"] == c["wasted_tasks"]
+    assert m["deaths"] == 1
+    # exact-latency percentiles vs the P² sketch: same data, close values
+    lat = st.trace.dispatch_latency()
+    assert m["dispatch_latency"]["n"] == lat["n"]
+    assert m["dispatch_latency"]["p50"] == pytest.approx(
+        lat["p50"], rel=0.25, abs=1e-4)
+    assert 0.0 < m["utilization"] <= 1.0 + 1e-9
+    json.dumps(m)                         # snapshot is JSON-safe
+
+
+def test_hub_fastforward_spans():
+    """The fast path never forces the scalar loop: FF spans feed the hub
+    and per-worker task credit stays exact."""
+    P, N = 8, 4096
+    tt = np.full(N, 1e-3)
+    spec = _spec(P, "virtual", technique="SS")
+    st = facade.run(spec, facade.build(spec, SimBackend(tt), n_tasks=N))
+    assert st.fast_forwarded > 0
+    m = st.metrics
+    assert m["finished"] == N
+    assert sum(w["tasks"] for w in m["workers"].values()) \
+        == sum(st.by_worker.values())
+
+
+def test_metrics_only_mode_stores_no_trace():
+    """metrics without trace: hub fed, no rows retained."""
+    P, N = 4, 150
+    tt = np.full(N, 0.002)
+    spec = _spec(P, "virtual", trace=False, metrics=True)
+    st = facade.run(spec, facade.build(spec, SimBackend(tt), n_tasks=N))
+    assert st.trace is None
+    assert st.metrics is not None and st.metrics["finished"] == N
+    d = st.to_dict()
+    assert "trace" not in d and d["metrics"]["finished"] == N
+    # and fully off stays fully off
+    off = _spec(P, "virtual", trace=False, metrics=False)
+    st2 = facade.run(off, facade.build(off, SimBackend(tt), n_tasks=N))
+    assert st2.trace is None and st2.metrics is None
+
+
+@pytest.mark.skipif(sys.platform == "win32", reason="POSIX only")
+def test_hub_process_mode():
+    """Process mode: worker-recorded EXEC rows reach the hub through
+    merge_raw, so per-worker speed telemetry exists master-side."""
+    P, N = 3, 45
+    tt = np.full(N, 0.003)
+    spec = _spec(P, "process")
+    r = api.simulate(spec, tt)
+    assert not r.hang and r.n_finished == N
+    m = r.metrics
+    assert m["finished"] == N
+    assert m["n_dispatches"] == r.n_assignments
+    assert set(m["workers"]) == set(range(P))
+    assert all(w["busy_s"] > 0 for w in m["workers"].values())
+
+
+def test_run_telemetry_matches_trace():
+    P, N = 4, 200
+    tt = np.full(N, 0.002)
+    spec = _spec(P, "virtual", metrics=False)
+    st = facade.run(spec, facade.build(spec, SimBackend(tt), n_tasks=N))
+    tel = run_telemetry(st.trace)
+    lat = st.trace.dispatch_latency()
+    assert tel["dispatch_latency"]["p50"] == lat["p50"]
+    assert tel["dispatch_latency"]["p99"] == lat["p99"]
+    assert 0.0 < tel["utilization_mean"] <= 1.0 + 1e-9
+    assert tel["n_events"] == len(st.trace)
+    json.dumps(tel)
+
+
+# ----------------------------------------------------- offline calibration
+def test_calibrate_recovers_straggler_speed():
+    """A virtual run with a declared straggler: calibration fits every
+    worker's effective speed back from the trace, exactly."""
+    P, N = 4, 256
+    tt = np.abs(np.random.default_rng(3).normal(0.004, 1e-3, N)) + 1e-4
+    workers = tuple(api.WorkerSpec(speed=0.5 if w == 2 else 1.0)
+                    for w in range(P))
+    spec = _spec(P, "virtual", workers=workers, metrics=False)
+    r = api.simulate(spec, tt)
+    res = calibrate_trace(r.trace, spec, task_times=tt)
+    cal = res.spec.cluster.worker_specs()
+    assert cal[2].speed == pytest.approx(0.5, rel=1e-6)
+    for w in (0, 1, 3):
+        assert cal[w].speed == pytest.approx(1.0, rel=1e-6)
+    # virtual clock: h and latency keep declared values, with reasons
+    kept = {x.field: x for x in res.residuals if not x.applied}
+    assert "execution.h" in kept
+    assert "virtual" in kept["execution.h"].reason
+    json.dumps(res.to_dict())
+
+
+def test_calibrate_threaded_closes_gap():
+    """Threaded tasks take sleep_per_task wall seconds, not the nominal
+    task time — the declared twin underestimates; the calibrated twin
+    must land closer to the measured run."""
+    P, N = 3, 96
+    tt = np.full(N, 0.004)
+    workers = tuple(api.WorkerSpec(sleep_per_task=0.006)
+                    for _ in range(P))
+    spec = _spec(P, "threaded", workers=workers, metrics=False)
+    r = api.simulate(spec, tt)
+    assert not r.hang and r.n_finished == N
+    res = calibrate_trace(r.trace, spec, task_times=tt)
+    # measured per-task cost ~0.006 vs nominal 0.004 -> speed ~2/3
+    for w in res.spec.cluster.worker_specs():
+        assert 0.45 < w.speed < 0.85
+    t_decl = api.simulate(
+        spec.override("execution.mode", "virtual")
+            .override("execution.trace", False), tt).t_par
+    t_cal = api.simulate(
+        res.spec.override("execution.mode", "virtual")
+               .override("execution.trace", False), tt).t_par
+    meas = r.t_wall
+    assert abs(t_cal - meas) < abs(t_decl - meas)
+
+
+def test_calibrate_without_workload_keeps_speeds():
+    P, N = 4, 128
+    tt = np.full(N, 0.002)
+    spec = _spec(P, "virtual", metrics=False)
+    r = api.simulate(spec, tt)
+    res = calibrate_trace(r.trace, spec)        # no task_times
+    assert [w.speed for w in res.spec.cluster.worker_specs()] \
+        == [w.speed for w in spec.cluster.worker_specs()]
+    assert any("no workload" in x.reason for x in res.residuals)
+
+
+def test_calibrate_preserves_declared_perturbations():
+    P, N = 3, 90
+    tt = np.full(N, 0.004)
+    workers = tuple(api.WorkerSpec(fail_time=0.1 if w == 1 else None)
+                    for w in range(P))
+    spec = _spec(P, "virtual", workers=workers, metrics=False)
+    r = api.simulate(spec, tt)
+    res = calibrate_trace(r.trace, spec, task_times=tt)
+    assert res.spec.cluster.worker_specs()[1].fail_time == 0.1
+
+
+# ----------------------------------------------------- in-loop calibration
+def test_spec_calibrator_drift_detector():
+    class St:
+        def __init__(self, rate):
+            self.n_samples, self.compute_time = 10, 1.0
+            self._r = rate
+
+        def rate(self, include_overhead):
+            return self._r
+
+    import dataclasses as dc
+
+    @dc.dataclass
+    class W:
+        wid: int
+        alive: bool
+        speed: float
+        stats: object
+
+    @dc.dataclass
+    class Snap:
+        workers: list
+
+    tt = np.full(10, 0.01)                        # mean task 0.01s
+    cal = SpecCalibrator(task_times=tt, threshold=0.2, alpha=1.0)
+    # measured 100 tasks/s x 0.01 = speed 1.0, declared 1.0: adopt (first)
+    snap = Snap([W(0, True, 1.0, St(100.0))])
+    s2, info = cal.apply(snap)
+    assert info["adopted"] and cal.n_calibrations == 1
+    assert s2.workers[0].speed == pytest.approx(1.0)
+    # small drift: no re-adoption
+    snap = Snap([W(0, True, 1.0, St(105.0))])
+    s3, info = cal.apply(snap)
+    assert not info["adopted"] and info["max_drift"] < 0.2
+    assert s3.workers[0].speed == pytest.approx(1.0)   # keeps last basis
+    # large drift: re-calibrates onto the new measurement
+    snap = Snap([W(0, True, 1.0, St(50.0))])
+    s4, info = cal.apply(snap)
+    assert info["adopted"] and cal.n_calibrations == 2
+    assert s4.workers[0].speed == pytest.approx(0.5)
+
+
+def test_adaptive_calibrate_records_decisions():
+    tt = np.abs(np.random.default_rng(4).normal(0.01, 0.003, 768)) + 1e-4
+    spec = api.RunSpec(
+        scheduling=api.SchedulingSpec(technique="AWF-C"),
+        cluster=api.ClusterSpec(4, tuple(api.WorkerSpec(speed=0.7)
+                                         for _ in range(4))),
+        execution=api.ExecutionSpec(mode="virtual"),
+        adaptive=api.AdaptiveSpec(enabled=True, decision_every_chunks=12,
+                                  max_decisions=4, calibrate=True,
+                                  drift_threshold=0.1))
+    r = api.simulate(spec, tt)
+    assert not r.hang
+    decs = r.adaptive_decisions
+    assert decs
+    assert all(d.calibration is not None for d in decs)
+    adopted = [d for d in decs if d.calibration["adopted"]]
+    assert adopted                        # first snapshot with data adopts
+    meas = adopted[-1].calibration["measured"]
+    # measured effective speed tracks the actual 0.7, not a declared 1.0
+    assert all(0.5 < v < 0.9 for v in meas.values())
+    json.dumps([d.to_dict() for d in decs])
+
+
+def test_adaptive_spec_calibrate_roundtrip():
+    spec = api.AdaptiveSpec(enabled=True, calibrate=True,
+                            drift_threshold=0.3, drift_alpha=0.7)
+    again = api.AdaptiveSpec.from_dict(
+        json.loads(json.dumps(spec.__dict__ | {"portfolio": []})))
+    assert again.calibrate and again.drift_threshold == 0.3
+    cfg = again.to_config()
+    assert cfg.calibrate and cfg.drift_alpha == 0.7
+    assert api.AdaptiveSpec().calibrate is False   # off by default
+
+
+# ------------------------------------------------------------ closed loop
+@pytest.mark.skipif(sys.platform == "win32", reason="POSIX only")
+def test_closed_loop_process_calibration():
+    """The tentpole acceptance, at test scale: record a process chaos
+    run, calibrate, and the calibrated virtual twin predicts a HELD-OUT
+    process run's makespan within 25% (and beats the declared twin)."""
+    P, N = 3, 96
+    tt = np.full(N, 0.004)
+    kill_at = N * 0.004 / P * 0.5
+    workers = tuple(api.WorkerSpec(fail_time=kill_at if w == 1 else None)
+                    for w in range(P))
+    spec = _spec(P, "process", workers=workers, trace=False,
+                 metrics=False)
+    last = None
+    for _ in range(3):                    # real-signal timing jitter
+        ra = api.simulate(spec.override("execution.trace", True), tt)
+        rb = api.simulate(spec, tt)       # held out from calibration
+        if ra.hang or rb.hang:
+            continue
+        res = calibrate_trace(ra.trace, spec, task_times=tt)
+        twin = res.spec.override("execution.mode", "virtual") \
+                       .override("execution.trace", False)
+        t_cal = api.simulate(twin, tt).t_par
+        err_cal = abs(t_cal - rb.t_wall) / rb.t_wall
+        last = err_cal
+        if err_cal <= 0.25:
+            break
+    assert last is not None and last <= 0.25, \
+        f"calibrated twin {last:.1%} off the held-out run"
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_trace_calibrate(tmp_path):
+    from repro.api import cli
+    doc = {
+        "workload": {"kind": "uniform", "n": 96, "t": 0.004},
+        "spec": _spec(3, "threaded", metrics=False, trace=False)
+        .replace(cluster=api.ClusterSpec(
+            3, tuple(api.WorkerSpec(sleep_per_task=0.006)
+                     for _ in range(3)), name="cli_cal")).to_dict(),
+    }
+    sf = tmp_path / "run.json"
+    sf.write_text(json.dumps(doc))
+    out = tmp_path / "out.json"
+    assert cli.main(["run", "--spec", str(sf), "--trace", str(out)]) == 0
+    cal = tmp_path / "calibrated.json"
+    assert cli.main(["trace", "calibrate", str(out), "--spec", str(sf),
+                     "-o", str(cal)]) == 0
+    calibrated = api.RunSpec.load(cal)
+    for w in calibrated.cluster.worker_specs():
+        assert 0.45 < w.speed < 0.85      # measured ~0.004/0.006
+    # --spec also accepts a bare RunSpec JSON (no workload -> speeds kept)
+    bare = tmp_path / "bare.json"
+    api.RunSpec.from_dict(doc["spec"]).save(bare)
+    assert cli.main(["trace", "calibrate", str(out),
+                     "--spec", str(bare)]) == 0
+    # missing --spec is a usage error
+    assert cli.main(["trace", "calibrate", str(out)]) == 2

@@ -160,7 +160,53 @@ def test_process_parity_with_real_sigkill(tmp_path):
     assert back.counters() == tr.counters()
 
 
+# ---------------------------------------------------- two-level process
+@pytest.mark.skipif(sys.platform == "win32", reason="POSIX only")
+def test_two_level_process_parity(tmp_path):
+    """n_groups>1: group masters relay worker trace rows upward and
+    reports carry JSON by-worker details — the reconstructed counters
+    (including per-worker credit) must still equal the stats."""
+    P, N = 4, 80
+    tt = np.full(N, 0.002)
+    spec = _spec(P, "process",
+                 workers=(api.WorkerSpec(sleep_per_task=0.002),) * P
+                 ).override("execution.n_groups", 2)
+    st = facade.run(spec, facade.build(spec, SimBackend(tt), n_tasks=N))
+    assert not st.hung and st.n_finished == N
+    tr = st.trace
+    assert tr.meta["mode"] == "process"
+    _assert_parity(st, tr)
+    # two-level reports carry the JSON by-dict detail the parity relies on
+    reps = np.flatnonzero(tr.kind == trc.EV_REPORT)
+    assert any(tr.details.get(int(i), "").startswith("{") for i in reps)
+    # and the export still round-trips losslessly
+    out = tmp_path / "two_level.json"
+    trc.save_chrome(tr, out)
+    assert trc.load_trace(out).counters() == tr.counters()
+
+
 # ----------------------------------------------------- export + serialize
+def test_chrome_losslessness():
+    """to_chrome() is a lossless archive: records reconstructed from the
+    embedded "repro" key reproduce counters(), dispatch latency and the
+    event count of the original exactly."""
+    P, N = 4, 160
+    tt = np.full(N, 0.002)
+    spec = _spec(P, "threaded",
+                 workers=(api.WorkerSpec(),) * (P - 1)
+                 + (api.WorkerSpec(fail_time=0.05),))
+    st = facade.run(spec, facade.build(spec, SimBackend(tt), n_tasks=N))
+    assert not st.hung and st.n_finished == N
+    tr = st.trace
+    doc = json.loads(json.dumps(trc.to_chrome(tr)))   # through JSON
+    back = trc.Trace.from_dict(doc["repro"])
+    assert len(back) == len(tr)
+    assert back.counters() == tr.counters()
+    assert back.dispatch_latency() == tr.dispatch_latency()
+    assert back.meta["mode"] == tr.meta["mode"]
+    assert back.details == tr.details
+
+
 def test_chrome_export_flags_duplicates():
     P, N = 4, 200
     tt = np.full(N, 0.01)
@@ -235,6 +281,13 @@ def test_cli_trace_end_to_end(tmp_path):
     assert tr.counters()["n_finished"] == 120
     record = json.loads(rec.read_text())
     assert record["n_finished"] == 120 and "trace" in record
+    # trace-derived telemetry is embedded in the emitted record
+    tel = record["telemetry"]
+    assert tel["dispatch_latency"]["n"] > 0
+    assert tel["dispatch_latency"]["p99"] >= tel["dispatch_latency"]["p50"]
+    assert 0.0 < tel["utilization_mean"] <= 1.0 + 1e-9
+    # an emitted record is itself a loadable trace source
+    assert trc.load_trace(rec).counters() == tr.counters()
     assert cli.main(["trace", "summarize", str(out)]) == 0
     assert cli.main(["trace", "diff", str(out), str(out)]) == 0
     assert cli.main(["trace", "diff", str(out)]) == 2
