@@ -1,0 +1,106 @@
+"""Decode hot-path benchmark: device-resident fused generation vs the
+per-token Python loop, at the batch sizes the serve path's ``_pad_pow2``
+buckets actually produce (B in {1, 4, 16, 64}).
+
+Both paths decode the SAME requests with the SAME model and must be
+token-identical (asserted per point); the only difference is execution
+shape — ``greedy_decode_group`` runs S + max_new - 1 jitted decode_step
+calls with one host round-trip per token, ``FusedGenerator`` runs ONE
+jitted call (full-sequence prefill + a fused lax.scan of decode_step +
+on-device argmax + token feedback).
+
+Quick mode (CI): S=32, max_new=8, gate >=2x at B=16.  Paper mode:
+S=128, max_new=16, asserts the headline >=5x at B=16 (CPU; every layer
+of the gap — jit dispatch, host syncs, per-token Python — is larger
+still on a real accelerator).  Emitted via ``benchmarks.run --only
+decode --emit-json`` into BENCH_decode.json; scripts/ci.sh seeds the
+dry-run baseline into benchmarks/baselines/.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+QUICK_FLOOR = 2.0       # ci.sh perf-smoke gate at B=16
+PAPER_FLOOR = 5.0       # ISSUE 10 acceptance target at B=16
+
+
+def _bench_model():
+    from repro.models import build_model
+    from repro.models.config import ModelConfig
+    # same small dense config serve_throughput uses; float32 (CPU honest)
+    cfg = ModelConfig(family="dense", n_layers=2, d_model=128, n_heads=4,
+                      n_kv_heads=4, d_ff=256, vocab_size=512,
+                      dtype="float32", name="decode_bench")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def decode_series(quick: bool = True, Bs=(1, 4, 16, 64)) -> list[str]:
+    from repro.runtime.serve_executor import (FusedGenerator,
+                                              greedy_decode_group)
+    S, new, reps = (32, 8, 2) if quick else (128, 16, 3)
+    floor = QUICK_FLOOR if quick else PAPER_FLOOR
+    cfg, model, params = _bench_model()
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    gen = FusedGenerator(model)
+    rng = np.random.default_rng(0)
+
+    rows, lines = [], []
+    x16 = None
+    for B in Bs:
+        prompts = rng.integers(0, cfg.vocab_size,
+                               size=(B, S)).astype(np.int32)
+        out_loop = greedy_decode_group(model, params, decode, prompts, new)
+        out_fused = gen(params, prompts, new)          # warm-up + parity
+        match = bool(np.array_equal(out_loop, out_fused))
+        t_loop = _best(
+            lambda: greedy_decode_group(model, params, decode, prompts,
+                                        new), reps)
+        t_fused = _best(lambda: gen(params, prompts, new), reps)
+        tokps_loop = B * new / t_loop
+        tokps_fused = B * new / t_fused
+        x = t_loop / t_fused
+        if B == 16:
+            x16 = x
+        rows.append((B, S, new, round(tokps_loop, 1),
+                     round(tokps_fused, 1), round(x, 2), match))
+        lines.append(f"decode,B={B},S={S},new={new},"
+                     f"tokps_loop={tokps_loop:.0f},"
+                     f"tokps_fused={tokps_fused:.0f},"
+                     f"speedup={x:.2f},match={match}")
+        assert match, f"fused decode diverged from loop at B={B}"
+
+    common.write_csv("decode_tokps",
+                     ["B", "S", "max_new", "tokps_loop", "tokps_fused",
+                      "speedup", "token_identical"], rows)
+    if x16 is not None:
+        lines.append(f"decode,gate,B=16,speedup={x16:.2f},floor={floor}")
+        assert x16 >= floor, (
+            f"decode perf gate: fused {x16:.2f}x loop at B=16 "
+            f"(need >={floor}x)")
+    return lines
+
+
+def main(quick: bool = True) -> list[str]:
+    return decode_series(quick=quick)
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

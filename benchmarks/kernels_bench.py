@@ -70,6 +70,38 @@ def main(quick: bool = True):
     ok = bool(np.allclose(np.asarray(got, np.float32), np.asarray(want),
                           atol=1e-3, rtol=1e-2))
     rows.append(("wkv6_256x64", us, ok))
+    # wkv6 single-step decode (C=1 degenerate case, serving hot path)
+    BH, dh = 8, 64
+    rd = jax.random.normal(jax.random.PRNGKey(11), (BH, dh))
+    kd = jax.random.normal(jax.random.PRNGKey(12), (BH, dh))
+    vd = jax.random.normal(jax.random.PRNGKey(13), (BH, dh))
+    wd = jnp.exp(-jnp.exp(jax.random.normal(jax.random.PRNGKey(14),
+                                            (BH, dh)) * 0.4))
+    ud = jax.random.normal(jax.random.PRNGKey(15), (BH, dh))
+    sd = jax.random.normal(jax.random.PRNGKey(16), (BH, dh, dh))
+    us, got = _time(ops.wkv6_decode, rd, kd, vd, wd, ud, sd)
+    yd, std = got
+    want_y = jnp.einsum("bk,bkv->bv", rd,
+                        sd + ud[:, :, None] *
+                        jnp.einsum("bk,bv->bkv", kd, vd))
+    want_s = wd[:, :, None] * sd + jnp.einsum("bk,bv->bkv", kd, vd)
+    ok = (bool(np.allclose(np.asarray(yd), np.asarray(want_y),
+                           atol=1e-4)) and
+          bool(np.allclose(np.asarray(std), np.asarray(want_s),
+                           atol=1e-4)))
+    rows.append(("wkv6_decode_8x64", us, ok))
+    # flash decode (q_len=1 vs KV cache, serving hot path)
+    L, dh = 256, 64
+    qd = jax.random.normal(jax.random.PRNGKey(17), (4, dh))
+    kc = jax.random.normal(jax.random.PRNGKey(18), (4, L, dh))
+    vc = jax.random.normal(jax.random.PRNGKey(19), (4, L, dh))
+    valid = (jnp.arange(L) < 130)
+    us, got = _time(ops.flash_decode, qd, kc, vc, valid, bk=128)
+    ok = bool(np.allclose(np.asarray(got),
+                          np.asarray(ref.attention_decode(qd, kc, vc,
+                                                          valid)),
+                          atol=1e-4))
+    rows.append(("flash_decode_4x256x64", us, ok))
 
     common.write_csv("kernels", ["kernel", "us_per_call", "matches_ref"],
                      rows)
@@ -77,6 +109,10 @@ def main(quick: bool = True):
         lines.append(f"kernels,{name},{us:.0f}us,ref_match={ok}")
         assert ok, name
     lines.extend(serve_throughput(quick))
+    if not quick:
+        # --paper: the headline decode claim (>=5x fused vs loop at B=16)
+        from benchmarks import decode_bench
+        lines.extend(decode_bench.decode_series(quick=False, Bs=(16,)))
     return lines
 
 

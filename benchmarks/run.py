@@ -104,10 +104,11 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     quick = not args.paper
 
-    from benchmarks import (fig3_performance, fig4_resilience,
-                            fig5_flexibility, fig_adaptive,
-                            fig_calibration, fig_cluster, fig_scale,
-                            kernels_bench, roofline, theory_table)
+    from benchmarks import (decode_bench, fig3_performance,
+                            fig4_resilience, fig5_flexibility,
+                            fig_adaptive, fig_calibration, fig_cluster,
+                            fig_scale, kernels_bench, roofline,
+                            theory_table)
     modules = [
         ("fig3", fig3_performance),
         ("fig4", fig4_resilience),
@@ -118,6 +119,7 @@ def main(argv=None) -> None:
         ("fig_scale", fig_scale),
         ("theory", theory_table),
         ("kernels", kernels_bench),
+        ("decode", decode_bench),
         ("roofline", roofline),
     ]
     if args.only:

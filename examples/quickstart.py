@@ -25,6 +25,9 @@
 10. Close the loop: calibrate the declared spec against the recorded
     run and re-forecast — the calibrated virtual twin predicts the
     physical run the declared twin underestimates by ~45%.
+11. Device-resident decode: the serving hot path generates every token
+    on device (prefill + fused scan, argmax feedback in-graph) — same
+    tokens as the per-token loop, multiples of its throughput.
 """
 
 import sys
@@ -267,4 +270,33 @@ assert abs(t_cal - meas10) < abs(t_decl - meas10)
 # In-loop: AdaptiveSpec(calibrate=True) runs this fit at every replan,
 # with an EWMA drift detector deciding when measured speeds have moved
 # enough to re-adopt — evidence lands on DecisionRecord.calibration.
+
+print("=== 11. Device-resident decode: tokens/s on the serving path ===")
+# The section-5 serve calls decode one jitted decode_step per token —
+# S+max_new host round-trips per request group.  FusedGenerator folds
+# the whole generation into ONE jitted call: model.prefill fills the
+# cache for all prompt positions in a single pass, then a lax.scan runs
+# the decode steps with greedy argmax ON DEVICE and the token fed back
+# in-graph.  Same model, same requests, token-identical output — the
+# only change is execution shape.  (benchmarks/decode_bench.py sweeps
+# B in {1,4,16,64}; scripts/ci.sh gates the speedup at B=16.)
+from repro.runtime.serve_executor import FusedGenerator, \
+    greedy_decode_group
+rng11 = np.random.default_rng(11)
+prompts11 = rng11.integers(0, cfg5.vocab_size, size=(8, 16)).astype(
+    np.int32)
+decode11 = jax.jit(model5.decode_step, donate_argnums=(1,))
+gen11 = FusedGenerator(model5)
+out_loop = greedy_decode_group(model5, params5, decode11, prompts11, 8)
+out_fused = gen11(params5, prompts11, 8)          # also the jit warm-up
+assert np.array_equal(out_loop, out_fused)
+t0 = _time.perf_counter()
+greedy_decode_group(model5, params5, decode11, prompts11, 8)
+t_loop11 = _time.perf_counter() - t0
+t0 = _time.perf_counter()
+gen11(params5, prompts11, 8)
+t_fused11 = _time.perf_counter() - t0
+print(f"   per-token loop  {8 * 8 / t_loop11:7.0f} tok/s")
+print(f"   fused (1 call)  {8 * 8 / t_fused11:7.0f} tok/s "
+      f"({t_loop11 / t_fused11:.1f}x, token-identical)")
 print("OK")

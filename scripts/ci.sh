@@ -66,6 +66,14 @@ cp artifacts/bench/BENCH_scale.json benchmarks/baselines/BENCH_scale.json
 # diff at the top of the tree
 cp artifacts/bench/BENCH_scale.json BENCH_scale.json
 timeout 300 python -m benchmarks.run --only theory --emit-json > /dev/null
+# decode perf-smoke gate: device-resident fused generation (prefill +
+# lax.scan decode with on-device argmax feedback) must beat the
+# per-token loop by >=2x at B=16 on CPU, token-identical (asserted
+# inside decode_bench quick mode; the full >=5x paper gate runs in
+# kernels_bench --paper).  Emits BENCH_decode.json and seeds the
+# dry-run baseline so successor PRs inherit the decode trajectory.
+timeout 300 python -m benchmarks.run --only decode --emit-json > /dev/null
+cp artifacts/bench/BENCH_decode.json benchmarks/baselines/BENCH_decode.json
 # spec-layer smokes: the facade, the CLI, and the examples cannot rot
 tmp_spec=$(mktemp /tmp/rdlb_spec_XXXXXX.json)
 python - "$tmp_spec" <<'PY'

@@ -75,15 +75,17 @@ class ServeTaskRunner:
     params: Any                  # numpy pytree
     requests: Any                # list of (rid, prompt np.int32, max_new)
     batch_decode: bool = True
+    fused_decode: bool = True    # device-resident prefill + fused scan
 
     start_method = "spawn"
 
     def setup(self) -> None:
         import jax
         from repro.models import build_model
-        from repro.runtime.serve_executor import Request
+        from repro.runtime.serve_executor import FusedGenerator, Request
         self._model = build_model(self.cfg)
-        self._decode = jax.jit(self._model.decode_step)
+        self._decode = jax.jit(self._model.decode_step, donate_argnums=(1,))
+        self._gen = FusedGenerator(self._model) if self.fused_decode else None
         self._reqs = {rid: Request(rid, prompt, max_new)
                       for rid, prompt, max_new in self.requests}
 
@@ -91,4 +93,5 @@ class ServeTaskRunner:
         from repro.runtime.serve_executor import decode_request_groups
         return decode_request_groups(
             self._model, self.params, self._decode,
-            [self._reqs[t] for t in tasks], batch_decode=self.batch_decode)
+            [self._reqs[t] for t in tasks], batch_decode=self.batch_decode,
+            generator=self._gen)

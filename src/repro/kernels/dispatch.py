@@ -1,0 +1,54 @@
+"""Kernel-path dispatch telemetry: which implementation actually ran.
+
+The model layers select Pallas kernels behind ``ModelConfig.use_kernel``
+with a jnp fallback; a silently-swallowed kernel failure would make a
+benchmark measure the fallback and report it as the kernel.  Every
+selection site records its outcome here: fallbacks are logged ONCE per
+(site, reason) per process via the ``repro.kernels`` logger, and
+``status()`` exposes the chosen path so benchmarks/tests can assert on
+what actually executed.
+"""
+
+from __future__ import annotations
+
+import logging
+import threading
+
+logger = logging.getLogger("repro.kernels")
+
+_lock = threading.Lock()
+_STATUS: dict[str, dict] = {}
+
+
+def record(site: str, path: str, reason: str = "") -> None:
+    """Record that ``site`` (e.g. "wkv6", "gqa_decode") ran ``path``
+    ("pallas" | "jnp" | "jnp-fallback").  A fallback logs a warning the
+    first time each distinct (site, reason) appears."""
+    with _lock:
+        st = _STATUS.setdefault(site, {"path": path, "reason": reason,
+                                       "n_fallbacks": 0, "_logged": set()})
+        st["path"], st["reason"] = path, reason
+        if path == "jnp-fallback":
+            st["n_fallbacks"] += 1
+            key = reason
+            if key not in st["_logged"]:
+                st["_logged"].add(key)
+                logger.warning(
+                    "kernel fallback at %s: Pallas path failed, using jnp "
+                    "(%s) — benchmarks are NOT measuring the kernel", site,
+                    reason or "unknown reason")
+
+
+def status(site: str | None = None) -> dict:
+    """Latest path per site: {site: {path, reason, n_fallbacks}}, or one
+    site's record (empty dict if it never ran)."""
+    with _lock:
+        snap = {s: {k: v for k, v in st.items() if k != "_logged"}
+                for s, st in _STATUS.items()}
+    return snap.get(site, {}) if site is not None else snap
+
+
+def reset() -> None:
+    """Forget everything (tests)."""
+    with _lock:
+        _STATUS.clear()

@@ -7,9 +7,12 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.dispatch import status as kernel_status  # noqa: F401
+from repro.kernels.flash_attention import (flash_attention,  # noqa: F401
+                                           flash_decode)
 from repro.kernels.mandelbrot import mandelbrot            # noqa: F401
-from repro.kernels.rwkv6_scan import wkv6, wkv6_batched    # noqa: F401
+from repro.kernels.rwkv6_scan import (wkv6, wkv6_batched,  # noqa: F401
+                                      wkv6_decode)
 from repro.kernels.spin_image import spin_image            # noqa: F401
 
 

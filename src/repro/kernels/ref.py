@@ -84,3 +84,15 @@ def wkv6(r, k, v, w, u, state):
 
     state, y = jax.lax.scan(step, state.astype(jnp.float32), (r, k, v, w))
     return y, state
+
+
+def attention_decode(q, k, v, valid, *, scale=None):
+    """Exact single-token attention over a KV cache (flash_decode oracle).
+    q: (B, D); k: (B, L, D); v: (B, L, Dv); valid: (L,) bool -> (B, Dv)."""
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum("bd,bld->bl", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bl,bld->bd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -23,8 +23,8 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 
-def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, state_ref, y_ref, s_s, *,
-            chunk: int):
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, state_ref, y_ref, s_out_ref,
+            s_s, *, chunk: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -60,12 +60,20 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, state_ref, y_ref, s_s, *,
                 + jax.lax.dot_general(k_tail, vv, (((0,), (0,)), ((), ())),
                                       preferred_element_type=jnp.float32))
 
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        s_out_ref[0] = s_s[...]
+
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6_batched(r, k, v, w, u, state, *, chunk: int = 32,
                  interpret: bool = True):
-    """Batched heads.  r,k,w: (BH, T, dk); v: (BH, T, dv); u: (BH, dk);
-    state: (BH, dk, dv) f32.  Returns y (BH, T, dv) f32."""
+    """Batched heads — the PREFILL entry: every (batch, head) pair is one
+    grid row, so the whole layer runs in a single ``pallas_call`` instead
+    of a vmapped per-head launch.  r,k,w: (BH, T, dk); v: (BH, T, dv);
+    u: (BH, dk); state: (BH, dk, dv) f32.
+    Returns (y (BH, T, dv) f32, final state (BH, dk, dv) f32) — the state
+    output is what lets the serve path chain prefill -> fused decode."""
     BH, T, dk = r.shape
     dv = v.shape[-1]
     chunk = min(chunk, T)
@@ -81,9 +89,61 @@ def wkv6_batched(r, k, v, w, u, state, *, chunk: int = 32,
             pl.BlockSpec((1, dk), lambda b, j: (b, 0)),
             pl.BlockSpec((1, dk, dv), lambda b, j: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, j: (b, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, T, dv), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((BH, T, dv), jnp.float32),
+                   jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+
+
+def _decode_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, state_ref,
+                   y_ref, s_out_ref):
+    """C=1 degenerate case of ``_kernel``: the strictly-lower-triangular
+    in-chunk matmul vanishes, leaving one rank-1 state update and one
+    (1, dk) x (dk, dv) contraction — y = r (S + diag(u) k v^T);
+    S' = diag(w) S + k v^T."""
+    rr = r_ref[...].astype(jnp.float32)                # (1, dk)
+    kk = k_ref[...].astype(jnp.float32)                # (1, dk)
+    vv = v_ref[...].astype(jnp.float32)                # (1, dv)
+    ww = w_ref[...].astype(jnp.float32)                # (1, dk)
+    u = u_ref[...].astype(jnp.float32)                 # (1, dk)
+    S = state_ref[0]                                   # (dk, dv) f32
+    kv = jax.lax.dot_general(kk, vv, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (dk, dv)
+    y_ref[...] = jax.lax.dot_general(
+        rr, S + u[0][:, None] * kv, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (1, dv)
+    s_out_ref[0] = ww[0][:, None] * S + kv
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6_decode(r, k, v, w, u, state, *, interpret: bool = True):
+    """Single-step fused WKV6 state update (the serving decode step).
+    r,k,w,u: (BH, dk); v: (BH, dv); state: (BH, dk, dv) f32.
+    Returns (y (BH, dv) f32, new state (BH, dk, dv) f32)."""
+    BH, dk = r.shape
+    dv = v.shape[-1]
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, dk), lambda b: (b, 0)),
+            pl.BlockSpec((1, dk), lambda b: (b, 0)),
+            pl.BlockSpec((1, dv), lambda b: (b, 0)),
+            pl.BlockSpec((1, dk), lambda b: (b, 0)),
+            pl.BlockSpec((1, dk), lambda b: (b, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dv), lambda b: (b, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((BH, dv), jnp.float32),
+                   jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32)],
         interpret=interpret,
     )(r, k, v, w, u, state)
 
@@ -91,16 +151,8 @@ def wkv6_batched(r, k, v, w, u, state, *, chunk: int = 32,
 def wkv6(r, k, v, w, u, state, *, chunk: int = 32, interpret: bool = True):
     """Single-head convenience twin of models.rwkv6.wkv6_chunked:
     r,k,w: (T, dk); v: (T, dv); u: (dk,); state: (dk, dv).
-    Returns (y (T, dv), final_state) — final state recomputed in jnp
-    (cheap) since the kernel only emits y."""
-    y = wkv6_batched(r[None], k[None], v[None], w[None], u[None],
-                     state[None].astype(jnp.float32), chunk=chunk,
-                     interpret=interpret)[0]
-    # final state via the same cumulative form (vectorized, exact)
-    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
-    la = jnp.cumsum(lw, axis=0)
-    decay_all = jnp.exp(la[-1])
-    k_tail = k.astype(jnp.float32) * jnp.exp(la[-1][None] - la)
-    final = (decay_all[:, None] * state.astype(jnp.float32)
-             + k_tail.T @ v.astype(jnp.float32))
-    return y.astype(r.dtype), final
+    Returns (y (T, dv), final_state f32)."""
+    y, final = wkv6_batched(r[None], k[None], v[None], w[None], u[None],
+                            state[None].astype(jnp.float32), chunk=chunk,
+                            interpret=interpret)
+    return y[0].astype(r.dtype), final[0]

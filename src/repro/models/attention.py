@@ -21,6 +21,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.common import (ParamSpec, apply_rope, constrain, dense,
                                  dense_specs, rms_norm)
@@ -242,12 +243,19 @@ def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def gqa_decode(p, cfg: ModelConfig, x, cache: dict, pos: jax.Array, *,
                window: int = 0, rope: bool = True,
                cross_kv: Optional[tuple] = None):
-    """One-token decode. x: (B,1,D); pos: scalar absolute position."""
+    """One-token decode. x: (B,1,D); pos: scalar absolute position.
+
+    With ``cfg.use_kernel`` the cache attention runs through the Pallas
+    ``flash_decode`` kernel (q_len=1 online softmax over kv-cache blocks,
+    the per-slot validity mask standing in for the causal structure); the
+    jnp ``_attend`` path below is its parity oracle.  Kernel failures fall
+    back to jnp, recorded via repro.kernels.dispatch (never silent)."""
     B = x.shape[0]
     dh, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     g = h // kvh
     positions = jnp.full((B, 1), pos, jnp.int32)
     q, k_new, v_new = _gqa_qkv(p, cfg, x, positions, rope=rope)
+    valid = None
     if cross_kv is not None:
         k, v = cross_kv
         mask = jnp.ones((1, 1, 1, k.shape[1]), dtype=bool)
@@ -266,11 +274,65 @@ def gqa_decode(p, cfg: ModelConfig, x, cache: dict, pos: jax.Array, *,
         if window > 0:
             valid &= cpos > pos - window
         mask = valid[None, None, None, :]
+    if (getattr(cfg, "use_kernel", False) and valid is not None
+            and k.shape[1] % min(128, k.shape[1]) == 0):
+        try:
+            from repro.kernels import dispatch
+            from repro.kernels.flash_attention import flash_decode
+            L = k.shape[1]
+            kf = _repeat_kv(k, g).transpose(0, 2, 1, 3).reshape(B * h, L, dh)
+            vf = _repeat_kv(v, g).transpose(0, 2, 1, 3).reshape(B * h, L, dh)
+            qf = q.reshape(B * h, dh)
+            out = flash_decode(qf, kf, vf, valid, scale=dh ** -0.5,
+                               bk=min(128, L))
+            out = out.reshape(B, 1, h * dh)
+            dispatch.record("gqa_decode", "pallas")
+            return dense(p["o"], out), new_cache
+        except Exception as e:  # pragma: no cover - exercised via tests
+            from repro.kernels import dispatch
+            dispatch.record("gqa_decode", "jnp-fallback",
+                            reason=f"{type(e).__name__}: {e}")
     q = constrain(q, ("batch", "seq", "heads", None))
     k = constrain(_repeat_kv(k, g), ("batch", "cache_seq", "heads", None))
     v = constrain(_repeat_kv(v, g), ("batch", "cache_seq", "heads", None))
     out = _attend(q, k, v, mask, dh ** -0.5)
     out = out.reshape(B, 1, h * dh)
+    return dense(p["o"], out), new_cache
+
+
+def gqa_prefill(p, cfg: ModelConfig, x, cache: dict, *, pos_offset: int = 0,
+                window: int = 0, rope: bool = True):
+    """Prompt prefill into an EMPTY decode cache: one full-sequence causal
+    (+ sliding-window) pass that writes the same K/V values the per-token
+    ``gqa_decode`` loop would, S positions at once.  This is what turns
+    the serve path's prompt walk (S sequential decode steps) into a
+    single parallel pass.
+
+    x: (B,S,D).  ``pos_offset`` shifts absolute positions exactly like
+    the decode path does (vlm patch prefix / hymba meta tokens — those
+    slots stay unwritten with pos -1, matching a decode loop that never
+    fed them); slot assignment follows the same ``pos % L`` rolling rule.
+    Returns (attn_out (B,S,D), filled cache)."""
+    B, S, _ = x.shape
+    dh, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = h // kvh
+    abs_pos = pos_offset + jnp.arange(S)
+    positions = jnp.broadcast_to(abs_pos[None], (B, S))
+    q, k, v = _gqa_qkv(p, cfg, x, positions, rope=rope)
+    L = cache["k"].shape[1]
+    nkeep = min(S, L)                       # rolling window keeps the tail
+    keep = np.arange(pos_offset + S - nkeep, pos_offset + S)
+    slots = keep % L if window > 0 else keep
+    ck = cache["k"].at[:, slots].set(k[:, -nkeep:].astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(v[:, -nkeep:].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[slots].set(jnp.asarray(keep, jnp.int32))
+    new_cache = {"k": ck, "v": cv, "pos": cpos}
+    mask = causal_mask(S, S, window=window)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(_repeat_kv(k, g), ("batch", "seq", "heads", None))
+    v = constrain(_repeat_kv(v, g), ("batch", "seq", "heads", None))
+    out = _attend(q, k, v, mask, dh ** -0.5)
+    out = out.reshape(B, S, h * dh)
     return dense(p["o"], out), new_cache
 
 
@@ -392,5 +454,38 @@ def mla_decode(p, cfg: ModelConfig, x, cache: dict, pos: jax.Array):
     ctx_c = jnp.einsum("bhs,bsc->bhc", probs, c_cache)   # (B,H,c)
     out = jnp.einsum("bhc,chd->bhd", ctx_c, p["uv"])     # absorb W_uv
     out = out.reshape(B, 1, h * dv)
+    new_cache = {"c_kv": c_cache, "k_rope": kr_cache}
+    return dense(p["o"], out), new_cache
+
+
+def mla_prefill(p, cfg: ModelConfig, x, cache: dict):
+    """Prompt prefill into the compressed decode cache — the vectorized
+    twin of ``mla_decode`` (same ABSORBED einsums so prefill numerics
+    match the per-token decode loop, S queries at once), writing
+    c_kv / k_rope for positions 0..S-1.  x: (B,S,D)."""
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)        # (B,S,H,*)
+    c_new, kr_new = _mla_ckv(p, cfg, x, positions)       # (B,S,c),(B,S,dr)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), 0, 1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), 0, 1)
+    ck, kr = c_cache[:, :S], kr_cache[:, :S]     # attend over STORED dtype
+    q_c = jnp.einsum("bqhd,chd->bqhc", q_nope, p["uk"])
+    q_c = constrain(q_c, ("batch", "seq", "heads", None))
+    scale = (dn + dr) ** -0.5
+    scores = (jnp.einsum("bqhc,bsc->bhqs", q_c, ck,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, kr,
+                           preferred_element_type=jnp.float32)) * scale
+    mask = causal_mask(S, S)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ck.dtype)
+    ctx_c = jnp.einsum("bhqs,bsc->bqhc", probs, ck)
+    out = jnp.einsum("bqhc,chd->bqhd", ctx_c, p["uv"])
+    out = out.reshape(B, S, h * dv)
     new_cache = {"c_kv": c_cache, "k_rope": kr_cache}
     return dense(p["o"], out), new_cache

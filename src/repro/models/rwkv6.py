@@ -161,24 +161,56 @@ def time_mix(p, cfg: ModelConfig, x, prev_tok, wkv_state, *,
     w_log = p["w0"] + _lora(p["lora_w"], _ddlerp(p, xn, xp, "w"))
     w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).astype(x.dtype)
 
-    def per_head(r, k, v, w, u, s):
-        if use_kernel:
-            from repro.kernels import rwkv6_scan
-            return rwkv6_scan.wkv6(r, k, v, w, u, s)
-        if S == 1:
-            return wkv6_sequential(r, k, v, w, u, s)
-        c = 32 if S % 32 == 0 else 1
-        if c == 1:
-            return wkv6_sequential(r, k, v, w, u, s)
-        return wkv6_chunked(r, k, v, w, u, s, chunk=c)
-
     def split(t):
         return t.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
     rh, kh, vh, wh = split(r), split(k), split(v), split(w)
     uh = p["u"].reshape(H, dh)
-    y, new_state = jax.vmap(jax.vmap(per_head, in_axes=(0, 0, 0, 0, 0, 0)),
-                            in_axes=(0, 0, 0, 0, None, 0))(
-        rh, kh, vh, wh, uh, wkv_state)
+
+    y = new_state = None
+    if use_kernel:
+        # Batched-heads Pallas dispatch: fold (B, H) into one grid axis so
+        # the whole layer is a single pallas_call (prefill) or the fused
+        # single-step kernel (decode) — no vmapped per-head launches.  Any
+        # kernel failure falls back to the jnp twins below, logged once
+        # per process via repro.kernels.dispatch (never silently).
+        try:
+            from repro.kernels import dispatch, rwkv6_scan
+            BH = B * H
+            fold = lambda t: t.reshape(BH, S, dh)
+            uu = jnp.broadcast_to(uh[None], (B, H, dh)).reshape(BH, dh)
+            ss = wkv_state.reshape(BH, dh, dh).astype(jnp.float32)
+            if S == 1:
+                yk, sk = rwkv6_scan.wkv6_decode(
+                    fold(rh)[:, 0], fold(kh)[:, 0], fold(vh)[:, 0],
+                    fold(wh)[:, 0], uu, ss)
+                yk = yk[:, None, :]
+            else:
+                c = min(32, S)
+                while S % c:
+                    c -= 1
+                yk, sk = rwkv6_scan.wkv6_batched(
+                    fold(rh), fold(kh), fold(vh), fold(wh), uu, ss, chunk=c)
+            y = yk.reshape(B, H, S, dh).astype(x.dtype)
+            new_state = sk.reshape(B, H, dh, dh)
+            dispatch.record("wkv6", "pallas")
+        except Exception as e:  # pragma: no cover - exercised via tests
+            from repro.kernels import dispatch
+            dispatch.record("wkv6", "jnp-fallback",
+                            reason=f"{type(e).__name__}: {e}")
+            y = new_state = None
+
+    if y is None:
+        def per_head(r, k, v, w, u, s):
+            if S == 1:
+                return wkv6_sequential(r, k, v, w, u, s)
+            c = 32 if S % 32 == 0 else 1
+            if c == 1:
+                return wkv6_sequential(r, k, v, w, u, s)
+            return wkv6_chunked(r, k, v, w, u, s, chunk=c)
+
+        y, new_state = jax.vmap(
+            jax.vmap(per_head, in_axes=(0, 0, 0, 0, 0, 0)),
+            in_axes=(0, 0, 0, 0, None, 0))(rh, kh, vh, wh, uh, wkv_state)
     y = y.transpose(0, 2, 1, 3).reshape(B, S, D)
     # per-head group norm
     yh = y.reshape(B, S, H, dh)
@@ -245,10 +277,13 @@ class RWKV6Model:
         return per_layer
 
     # -------------------------------------------------------- forward
-    def forward(self, params, tokens, state=None, *, use_kernel=False,
+    def forward(self, params, tokens, state=None, *, use_kernel=None,
                 last_only=False):
-        """tokens: (B, S) -> logits (B, S, V); carries state if given."""
+        """tokens: (B, S) -> logits (B, S, V); carries state if given.
+        use_kernel=None defers to cfg.use_kernel."""
         cfg = self.cfg
+        if use_kernel is None:
+            use_kernel = cfg.use_kernel
         B, S = tokens.shape
         if state is None:
             state = self.init_state(B)
@@ -294,6 +329,14 @@ class RWKV6Model:
     # --------------------------------------------------------- decode
     def init_cache(self, batch: int, max_len: int):
         return self.init_state(batch)     # O(1) state; max_len unused
+
+    def prefill(self, params, cache, tokens):
+        """Prompt prefill: one stateful full-sequence pass — the carried
+        (token-shift, wkv) state IS the decode cache, so prefill is just
+        ``forward`` with ``last_only`` (chunked-parallel wkv when S
+        divides into chunks; exact sequential twin otherwise).  Returns
+        (last-position logits (B, 1, V), state)."""
+        return self.forward(params, tokens, cache, last_only=True)
 
     def decode_step(self, params, cache, tokens, pos):
         """tokens: (B, 1). pos unused (stateful recurrence)."""

@@ -251,6 +251,38 @@ class HymbaModel:
             _, cache = self._decode_embed(params, cache, x, jnp.int32(i))
         return cache
 
+    def prefill(self, params, cache, tokens):
+        """Prompt prefill from an EMPTY decode cache: the decode branch of
+        every layer run full-sequence — gqa_prefill writes each layer's
+        (global or rolling-window) KV cache at the meta-offset positions,
+        and mamba_apply runs the identical selective-scan recurrence from
+        the zero state the decode loop starts from.  Meta tokens are NOT
+        fed (positions are offset past them instead), matching the greedy
+        serve decode loop, which never meta-prefills.  tokens: (B,S) ->
+        (last-position logits (B,1,V), filled cache)."""
+        cfg = self.cfg
+        M = cfg.n_meta_tokens
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = constrain(x, ("batch", "seq", "embed"))
+        new_cache = {}
+        for i in range(cfg.n_layers):
+            p = params[f"layer_{i}"]
+            c = dict(cache[f"layer_{i}"])
+            xn = rms_norm(x, p["norm"])
+            a_out, c["attn"] = attn.gqa_prefill(
+                p["attn"], cfg, xn, c["attn"], pos_offset=M,
+                window=self._window(i))
+            m_out, c["ssm"], c["conv"] = mamba_apply(
+                p["mamba"], cfg, xn, c["ssm"], c["conv"])
+            fused = 0.5 * (rms_norm(a_out, None) * p["beta_attn"]
+                           + rms_norm(m_out, None) * p["beta_ssm"])
+            x = x + fused.astype(x.dtype)
+            x = x + ffn_apply(p["ffn"], rms_norm(x, p["norm_ffn"]), cfg.act)
+            x = constrain(x, ("batch", "seq", "embed"))
+            new_cache[f"layer_{i}"] = c
+        x = rms_norm(x[:, -1:, :], params["final_norm"])
+        return x @ params["head"], new_cache
+
     def decode_step(self, params, cache, tokens, pos):
         """tokens (B,1); pos = TEXT position (meta offset added here).
         The cache must have been meta-prefilled (prefill_meta) or filled

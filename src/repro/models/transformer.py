@@ -314,3 +314,56 @@ class TransformerModel:
                 params["moe_layers"], cache["moe"], x, pos, moe=True)
         x = apply_norm(params["final_norm"], cfg, x)
         return self._logits(params, x), new_cache
+
+    # ---------------------------------------------------------- prefill
+    def _prefill_stack(self, stack, cache, x, *, moe: bool):
+        cfg = self.cfg
+
+        def body(h, xs):
+            lp, lc = xs
+            xn = apply_norm(lp["ln1"], cfg, h)
+            if cfg.mla:
+                a, lc = attn.mla_prefill(lp["attn"], cfg, xn, lc)
+            else:
+                a, lc = attn.gqa_prefill(
+                    lp["attn"], cfg, xn, lc, window=cfg.sliding_window,
+                    pos_offset=(cfg.n_patch_tokens
+                                if cfg.family == "vlm" else 0))
+            h = h + a
+            xn = apply_norm(lp["ln2"], cfg, h)
+            if moe:
+                f, _ = moe_apply(lp["ffn"], cfg, xn)
+            else:
+                f = ffn_apply(lp["ffn"], xn, cfg.act)
+            h = h + f
+            return constrain(h, ("batch", "seq", "embed")), lc
+
+        x, new_cache = jax.lax.scan(body, x, (stack, cache))
+        return x, new_cache
+
+    def prefill(self, params, cache, tokens):
+        """Prompt prefill from an EMPTY decode cache: fills every layer's
+        KV cache with exactly the values the per-token decode loop would
+        write for positions 0..S-1 (same rope, same slot rule), in ONE
+        full-sequence pass.  Returns (last-position logits (B,1,V),
+        filled cache) — the contract FusedGenerator chains into the
+        device-resident decode scan.
+
+        Text-only entry (no patch embeddings): on vlm configs the patch
+        slots stay unwritten, matching a decode loop that never fed
+        patches — the greedy serve path's behaviour."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.family == "vlm":
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        x = constrain(x, ("batch", "seq", "embed"))
+        new_cache = {}
+        if self.n_dense_stack > 0:
+            x, new_cache["dense"] = self._prefill_stack(
+                params["dense_layers"], cache["dense"], x, moe=False)
+        if self.n_moe_layers > 0:
+            x, new_cache["moe"] = self._prefill_stack(
+                params["moe_layers"], cache["moe"], x, moe=True)
+        x = apply_norm(params["final_norm"], cfg, x[:, -1:, :])
+        return self._logits(params, x), new_cache

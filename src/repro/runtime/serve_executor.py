@@ -9,13 +9,20 @@ duplicates are interchangeable).  This is the paper's idle-tail insight
 applied to serving: P99 latency under a slow/failed replica collapses to
 ~P50 because the tail is re-executed elsewhere.
 
-Two performance layers on top of the shared engine:
+Three performance layers on top of the shared engine:
 
   * BATCHED DECODE (``batch_decode=True``): a chunk's requests are grouped
     by (prompt length, max_new_tokens) and each group decodes as ONE
     padded, jitted batch call — (B, 1) tokens through ``decode_step`` —
     instead of a per-request Python token loop.  The batch dimension is
     padded up to a power of two so jit recompiles stay bounded.
+  * DEVICE-RESIDENT GENERATION (``fused_decode=True``, the default): the
+    per-token Python loop is replaced by :class:`FusedGenerator` — one
+    jitted call per (padded B, prompt_len, max_new) bucket that prefills
+    the cache in a single full-sequence pass, then runs max_new fused
+    (decode_step + on-device argmax + token feedback) steps inside a
+    ``lax.scan`` with the cache donated between steps.  Zero host
+    round-trips per token; token-identical to the loop.
   * CONCURRENT MODE (``concurrent=True``): replicas run as real OS
     threads; rDLB duplicates genuinely race their originals in wall-clock
     time, and first-completion-wins is physical rather than an artifact
@@ -25,6 +32,7 @@ Two performance layers on top of the shared engine:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -33,6 +41,11 @@ import numpy as np
 
 from repro import api
 from repro.runtime.backends import ServeBackend
+
+# Buffer donation is a no-op on CPU backends (jax warns per compile);
+# on TPU the same donate_argnums reuses the cache buffers in place.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 _UNSET = object()
 
@@ -91,16 +104,93 @@ def greedy_decode_group(model, params, decode_step, prompts: np.ndarray,
     return toks[:B, S:]
 
 
+class FusedGenerator:
+    """Device-resident greedy generation: prefill + fused decode scan.
+
+    One jitted call per (padded B, prompt_len, max_new) shape bucket —
+    the same ``_pad_pow2`` buckets the grouped loop path uses, so one
+    compile serves a bucket.  Inside the call:
+
+      1. ``model.prefill`` fills the decode cache for all S prompt
+         positions in one full-sequence pass (models without a prefill
+         method — whisper — fall back to an in-graph ``lax.scan`` over
+         the prompt, still device-resident);
+      2. a ``lax.scan`` runs max_new fused steps — decode_step, greedy
+         argmax ON DEVICE, and the sampled token fed straight back as the
+         next step's input.  No host round-trip per token, one jit
+         dispatch per request group instead of S + max_new.
+
+    The cache is donated into the call (in-place buffer reuse on TPU;
+    harmless no-op on CPU).  Token-identical to ``greedy_decode_group``:
+    prefill writes the same cache values and the scan computes the same
+    argmax chain — asserted across model families in
+    tests/test_decode_fused.py.
+    """
+
+    def __init__(self, model):
+        self.model = model
+        self._gen = jax.jit(self._generate, static_argnames=("max_new",),
+                            donate_argnums=(1,))
+
+    def _generate(self, params, cache, prompts, *, max_new: int):
+        model = self.model
+        B, S = prompts.shape
+        if hasattr(model, "prefill"):
+            logits, cache = model.prefill(params, cache, prompts)
+        else:
+            if S > 1:
+                def pstep(cache, inp):
+                    tok, pos = inp
+                    _, cache = model.decode_step(params, cache,
+                                                 tok[:, None], pos)
+                    return cache, None
+                cache, _ = jax.lax.scan(
+                    pstep, cache,
+                    (prompts[:, :-1].T, jnp.arange(S - 1, dtype=jnp.int32)))
+            logits, cache = model.decode_step(
+                params, cache, prompts[:, -1:], jnp.int32(S - 1))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+        def step(carry, pos):
+            cache, tok = carry
+            logits, cache = model.decode_step(params, cache, tok[:, None],
+                                              pos)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return (cache, nxt), tok
+
+        (cache, last), emitted = jax.lax.scan(
+            step, (cache, tok), S + jnp.arange(max_new - 1, dtype=jnp.int32))
+        return jnp.concatenate([emitted.T, last[:, None]], axis=1)
+
+    def __call__(self, params, prompts: np.ndarray,
+                 max_new: int) -> np.ndarray:
+        """prompts: (B, S) int32 -> generated tokens (B, max_new)."""
+        B, S = prompts.shape
+        Bp = _pad_pow2(B)
+        buf = np.empty((Bp, S), dtype=np.int32)
+        buf[:B] = prompts
+        buf[B:] = prompts[0]
+        cache = self.model.init_cache(Bp, S + max_new)
+        toks = self._gen(params, cache, jnp.asarray(buf), max_new=max_new)
+        return np.asarray(toks)[:B]
+
+
 def decode_request_groups(model, params, decode_step, reqs: list,
-                          *, batch_decode: bool = True) -> dict:
+                          *, batch_decode: bool = True,
+                          generator: Optional[FusedGenerator] = None) -> dict:
     """Decode a chunk of requests -> {rid: tokens}.
 
     Batched mode groups by (prompt_len, max_new_tokens) — each group is
-    one padded batch call; singleton shapes fall out naturally."""
+    one padded batch call; singleton shapes fall out naturally.  With a
+    ``generator`` the group decodes device-resident (FusedGenerator);
+    otherwise through the per-token ``greedy_decode_group`` loop."""
+    def decode_group(prompts: np.ndarray, max_new: int) -> np.ndarray:
+        if generator is not None:
+            return generator(params, prompts, max_new)
+        return greedy_decode_group(model, params, decode_step, prompts,
+                                   max_new)
     if not batch_decode:
-        return {r.rid: greedy_decode_group(model, params, decode_step,
-                                           r.prompt[None, :],
-                                           r.max_new_tokens)[0]
+        return {r.rid: decode_group(r.prompt[None, :], r.max_new_tokens)[0]
                 for r in reqs}
     groups: dict[tuple, list] = {}
     for r in reqs:
@@ -108,8 +198,7 @@ def decode_request_groups(model, params, decode_step, reqs: list,
     out: dict[int, np.ndarray] = {}
     for (S, max_new), rs in groups.items():
         prompts = np.stack([r.prompt for r in rs]).astype(np.int32)
-        toks = greedy_decode_group(model, params, decode_step, prompts,
-                                   max_new)
+        toks = decode_group(prompts, max_new)
         for r, t in zip(rs, toks):
             out[r.rid] = t
     return out
@@ -132,6 +221,7 @@ class RDLBServeExecutor:
                  technique: Any = _UNSET, rdlb_enabled: Any = _UNSET,
                  max_duplicates: Any = _UNSET,
                  batch_decode: bool = True,
+                 fused_decode: bool = True,
                  concurrent: Any = _UNSET,
                  adaptive: Optional[Any] = None):
         legacy = {k: v for k, v in dict(
@@ -155,9 +245,13 @@ class RDLBServeExecutor:
         self.params = params
         self.n_workers = spec.cluster.n_workers
         self.batch_decode = batch_decode
+        self.fused_decode = fused_decode
         self.adaptive = adaptive        # repro.adaptive policy (requests
                                         # are unit-cost tasks)
-        self._decode = jax.jit(model.decode_step)
+        # donate the cache: each decode step reuses its buffers in place
+        # on TPU instead of copying the full KV/state cache per token
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._fused = FusedGenerator(model) if fused_decode else None
         # Live perturbation state the legacy vocabulary mutates between
         # serve() calls; overlaid on the spec's cluster each serve().
         # Spec-declared deaths seed the set so fail-stops persist.
@@ -183,7 +277,8 @@ class RDLBServeExecutor:
         runner, so every mode decodes identically)."""
         return decode_request_groups(self.model, self.params,
                                      self._decode, reqs,
-                                     batch_decode=self.batch_decode)
+                                     batch_decode=self.batch_decode,
+                                     generator=self._fused)
 
     # -------------------------------------------------------------- serve
     def serve(self, requests: list[Request],
@@ -225,7 +320,8 @@ class RDLBServeExecutor:
                 cfg, params_np,
                 [(r.rid, np.asarray(r.prompt, dtype=np.int32),
                   int(r.max_new_tokens)) for r in requests],
-                batch_decode=self.batch_decode)
+                batch_decode=self.batch_decode,
+                fused_decode=self.fused_decode)
         eng = api.build(spec, backend, n_tasks=N, adaptive=self.adaptive,
                         factory=factory)
         stats = api.run(spec, eng)
